@@ -1,0 +1,44 @@
+"""Fig. 9 reproduction: DRAM-chip energy per KB across platforms."""
+from __future__ import annotations
+
+import time
+
+from repro.core import PAPER_ENERGY_CLAIMS, energy_table
+
+
+def ratios(table):
+    out = {}
+    for (a, b, op), claim in PAPER_ENERGY_CLAIMS.items():
+        ea = (table[a][op] if op in table[a]
+              else table[a].get("copy", 0.0))
+        eb = table[b][op]
+        got = ea / eb
+        out[(a, b, op)] = (got, claim, got / claim - 1.0)
+    return out
+
+
+def run(csv_rows):
+    t0 = time.time()
+    table = energy_table()
+    rr = ratios(table)
+    us = (time.time() - t0) * 1e6
+
+    print("\n-- Fig. 9: DRAM chip energy (nJ/KB) --")
+    ops = ("not", "xnor2", "add")
+    print(f"{'platform':<12}" + "".join(f"{op:>10}" for op in ops)
+          + f"{'copy':>10}")
+    for name, r in table.items():
+        cells = "".join(f"{r.get(op, float('nan')):>10.2f}" for op in ops)
+        print(f"{name:<12}{cells}{r.get('copy', float('nan')):>10.2f}")
+    print("\n-- energy ratios (X / DRIM) vs paper claims --")
+    for key, (got, claim, dev) in rr.items():
+        print(f"{' / '.join(key):<34} computed {got:6.2f}  paper "
+              f"{claim:6.2f}  dev {dev:+.1%}")
+
+    worst = max(abs(d) for _, _, d in rr.values())
+    csv_rows.append(("fig9_energy", us, f"worst_ratio_dev={worst:.3f}"))
+    return table, rr
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,98 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+dryrun_results.jsonl.  Run:  PYTHONPATH=src python -m benchmarks.gen_experiments
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import load_cells, roofline_terms
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def dryrun_table(cells, mesh):
+    lines = ["| arch | shape | status | compile s | GiB/dev peak | "
+             "HLO GFLOPs/dev | HLO GB/dev | coll GB/dev | "
+             "AG/AR/RS/A2A/CP counts |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m, v), r in sorted(cells.items()):
+        if m != mesh or v != "base":
+            continue
+        c = r.get("collective_counts", {})
+        counts = "/".join(str(int(c.get(k, 0))) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {arch} | {shape} | {r['status']} | {r.get('compile_s', '-')}"
+            f" | {fmt_bytes(r.get('mem_peak_b', 0))}"
+            f" | {r['hlo_flops_per_device'] / 1e9:,.0f}"
+            f" | {r['hlo_bytes_per_device'] / 1e9:,.0f}"
+            f" | {r['collective_bytes_per_device'] / 1e9:,.1f}"
+            f" | {counts} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells, mesh, variant="base"):
+    lines = ["| arch | shape | t_comp s | t_mem s | t_coll s | bound s | "
+             "dominant | MFU@bound | useful | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m, v), r in sorted(cells.items()):
+        if m != mesh or v != variant:
+            continue
+        t = roofline_terms(r)
+        degenerate = t["bound_s"] == 0
+        note = ("probe n/a (see §Dry-run notes)" if degenerate else "")
+        lines.append(
+            f"| {arch} | {shape} | {t['t_compute_s']:.3f} | "
+            f"{t['t_memory_s']:.3f} | {t['t_collective_s']:.3f} | "
+            f"{t['bound_s']:.3f} | {t['dominant']} | "
+            f"{t['mfu_at_bound']:.2%} | {t['useful_flops_ratio']:.2f} | "
+            f"{note} |")
+    return "\n".join(lines)
+
+
+def variant_table(cells, arch, shape, mesh="single"):
+    lines = [f"**{arch} x {shape}** ({mesh}-pod)", "",
+             "| variant | t_comp | t_mem | t_coll | bound s | MFU@bound | "
+             "peak GiB |", "|---|---|---|---|---|---|---|"]
+    for (a, sh, m, v), r in sorted(cells.items(),
+                                   key=lambda kv: kv[1].get("total_s", 0)):
+        if (a, sh, m) != (arch, shape, mesh) or r["status"] != "ok":
+            continue
+        t = roofline_terms(r)
+        lines.append(
+            f"| {v} | {t['t_compute_s']:.2f} | {t['t_memory_s']:.2f} | "
+            f"{t['t_collective_s']:.2f} | {t['bound_s']:.2f} | "
+            f"{t['mfu_at_bound']:.2%} | {r.get('mem_peak_b', 0)/2**30:.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("no dryrun results", file=sys.stderr)
+        return 1
+    print("### Dry-run (single-pod 16x16 = 256 chips, baseline)\n")
+    print(dryrun_table(cells, "single"))
+    print("\n### Dry-run (multi-pod 2x16x16 = 512 chips, baseline)\n")
+    print(dryrun_table(cells, "multi"))
+    print("\n### Roofline (single-pod, baseline)\n")
+    print(roofline_table(cells, "single"))
+    print("\n### Roofline (multi-pod, baseline)\n")
+    print(roofline_table(cells, "multi"))
+    print("\n### Roofline (single-pod, optimized defaults)\n")
+    print(roofline_table(cells, "single", "opt"))
+    for pair in (("kimi-k2-1t-a32b", "train_4k"),
+                 ("qwen3-14b", "train_4k"),
+                 ("mamba2-130m", "train_4k"),
+                 ("deepseek-v3-671b", "train_4k")):
+        print()
+        print(variant_table(cells, *pair))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Kernel-adjusted memory roofline for the hillclimbed pairs.
+
+The CPU dry-run cannot execute Pallas kernels (interpret mode would
+inline the kernel body per grid point), so the XLA dense-scores
+attention stands in and its [B, H, S, S] temporaries dominate the
+memory term.  This tool measures that quadratic component EMPIRICALLY —
+no hand-waved per-op byte model:
+
+  per-layer HBM bytes are probed (unrolled 1- vs 2-layer graphs, see
+  launch/dryrun.py) at S and 2S with the same global batch; writing
+      bytes(S) = a*S + q*S^2
+  the two probes pin q exactly:  q = (bytes(2S) - 2*bytes(S)) / (2*S^2).
+
+The flash kernel's own traffic is linear in S except the KV re-read per
+Sq block (S^2 * (k+v bytes) / BQ — two orders down); so the
+kernel-adjusted memory term removes n_layers * q * S^2 and adds the
+analytic flash traffic  3 * (q+k+v+o bytes)  (fwd + recompute-bwd).
+
+Usage:  PYTHONPATH=src python -m benchmarks.kernel_adjusted qwen3-14b ...
+"""
+from __future__ import annotations
+
+import sys
+
+HBM = 819e9
+PEAK = 197e12
+
+
+def measure(arch: str, seq: int = 4096, global_batch: int = 256):
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES, ShapeConfig
+    from repro.launch import dryrun as dr
+
+    cfg = get_config(arch)
+    optimizer = dr.ARCH_OPTIMIZER.get(arch, "adamw")
+    per_layer = {}
+    for s in (seq // 2, seq):
+        SHAPES["__qprobe"] = ShapeConfig("__qprobe", s, global_batch,
+                                         "train")
+        try:
+            costs = {}
+            for L in (1, 2):
+                pcfg = cfg.replace(n_layers=L, scan_unroll=True)
+                from repro.launch.mesh import make_production_mesh
+                mesh = make_production_mesh()
+                with mesh:
+                    jitted, args = dr.build_cell(pcfg, "__qprobe", mesh,
+                                                 optimizer=optimizer)
+                    compiled = jitted.lower(*args).compile()
+                    ca = compiled.cost_analysis() or {}
+                    costs[L] = float(ca.get("bytes accessed", 0.0))
+            per_layer[s] = costs[2] - costs[1]
+        finally:
+            del SHAPES["__qprobe"]
+    s_half = seq // 2
+    q = (per_layer[seq] - 2 * per_layer[s_half]) / (2 * s_half ** 2)
+    quad_bytes_per_layer = q * seq ** 2
+    return per_layer, q, quad_bytes_per_layer
+
+
+def flash_bytes_per_layer(cfg, seq: int, global_batch: int,
+                          devices: int = 256) -> float:
+    """Analytic fwd+bwd flash traffic per device: 3 passes of q,k,v,o
+    (bf16) + lse; the S^2/BQ kv re-read term is ~1% and folded in."""
+    b_loc = global_batch * seq // devices  # tokens per device
+    d_attn = cfg.n_heads * cfg.d_head
+    d_kv = 2 * cfg.n_kv_heads * cfg.d_head
+    linear = 3 * b_loc * (2 * d_attn + d_kv) * 2.0
+    rereads = 3 * (seq / 128.0) * (global_batch / devices) * d_kv * 2.0
+    return linear + rereads
+
+
+def report(arch: str, record: dict, seq: int = 4096,
+           global_batch: int = 256):
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    per_layer, qcoef, quad = measure(arch, seq, global_batch)
+    n_l = cfg.n_layers
+    flash = flash_bytes_per_layer(cfg, seq, global_batch)
+    bytes_total = record["hlo_bytes_per_device"]
+    adj = bytes_total - n_l * quad + n_l * flash
+    out = {
+        "arch": arch,
+        "per_layer_bytes@S/2": per_layer[seq // 2],
+        "per_layer_bytes@S": per_layer[seq],
+        "quad_bytes_per_layer": quad,
+        "flash_bytes_per_layer": flash,
+        "t_mem_s": bytes_total / HBM,
+        "t_mem_kernel_adjusted_s": adj / HBM,
+    }
+    return out
+
+
+def main(argv):
+    import json
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from benchmarks.roofline import load_cells
+    cells = load_cells()
+    archs = argv or ["qwen3-14b", "kimi-k2-1t-a32b"]
+    for arch in archs:
+        rec = (cells.get((arch, "train_4k", "single", "opt"))
+               or cells.get((arch, "train_4k", "single", "base")))
+        if rec is None:
+            print(f"{arch}: no dry-run record", file=sys.stderr)
+            continue
+        out = report(arch, rec)
+        print(json.dumps({k: (round(v, 3) if isinstance(v, float) else v)
+                          for k, v in out.items()}, indent=1))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,134 @@
+"""Roofline analysis from the multi-pod dry-run artifacts.
+
+Derives the three roofline terms per (arch x shape x mesh x variant) cell
+from `dryrun_results.jsonl` (written by `repro.launch.dryrun`):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_wire_bytes_per_device / ICI_link_bw
+
+Hardware constants (TPU v5e class, per the brief):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+The collective term conservatively charges all wire bytes to a single
+link (ring collectives keep every hop on one link pair at a time); a
+4-link 2D-torus bound is also reported as `t_coll_4link`.
+
+Per cell we report: the three terms (seconds), the dominant bottleneck,
+MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE + attention), the useful-
+compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste),
+and the roofline-bound step time + model-FLOP utilisation (MFU at the
+bound = model_flops_per_chip / peak / bound_s).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_LINK_BW = 50e9       # bytes/s / link
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.jsonl")
+
+
+def load_cells(path: str = RESULTS):
+    cells = {}
+    if not os.path.exists(path):
+        return cells
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "base"))
+        cells[key] = r  # later records win (re-runs supersede)
+    return cells
+
+
+def _field(rec: dict, key: str) -> float:
+    """Probe-extrapolated value, falling back to the raw scan-body count
+    when the probe degenerated (tiny decode cells can difference to ~0
+    between 1- and 2-layer graphs after constant folding)."""
+    v = float(rec.get(key, 0.0) or 0.0)
+    if v <= 0.0:
+        v = float(rec.get(f"scanbody_{key}", 0.0) or 0.0)
+    return v
+
+
+def roofline_terms(rec: dict) -> dict:
+    devices = rec["devices"]
+    t_c = _field(rec, "hlo_flops_per_device") / PEAK_FLOPS
+    t_m = _field(rec, "hlo_bytes_per_device") / HBM_BW
+    t_x = _field(rec, "collective_bytes_per_device") / ICI_LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    model_flops_dev = rec["model_flops_global"] / devices
+    hlo_flops_global = _field(rec, "hlo_flops_per_device") * devices
+    useful = (rec["model_flops_global"] / hlo_flops_global
+              if hlo_flops_global else 0.0)
+    mfu = (model_flops_dev / PEAK_FLOPS / bound_s) if bound_s else 0.0
+    return {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "t_coll_4link_s": t_x / 4.0,
+        "dominant": dominant, "bound_s": bound_s,
+        "useful_flops_ratio": useful, "mfu_at_bound": mfu,
+        "mem_peak_gib": rec.get("mem_peak_b", 0) / 2**30,
+    }
+
+
+def table(cells, mesh="single", variant="base"):
+    rows = []
+    for (arch, shape, m, v), rec in sorted(cells.items()):
+        if m != mesh or v != variant:
+            continue
+        rows.append((arch, shape, roofline_terms(rec), rec))
+    return rows
+
+
+def print_table(rows, title):
+    print(f"\n-- Roofline: {title} --")
+    print(f"{'arch':<18}{'shape':<13}{'t_comp':>9}{'t_mem':>9}"
+          f"{'t_coll':>9}{'bound':>9} {'dom':<11}{'MFU@bound':>10}"
+          f"{'useful':>8}{'GiB/dev':>9}")
+    for arch, shape, t, rec in rows:
+        print(f"{arch:<18}{shape:<13}"
+              f"{t['t_compute_s']:>9.3f}{t['t_memory_s']:>9.3f}"
+              f"{t['t_collective_s']:>9.3f}{t['bound_s']:>9.3f} "
+              f"{t['dominant']:<11}{t['mfu_at_bound']:>10.2%}"
+              f"{t['useful_flops_ratio']:>8.2f}{t['mem_peak_gib']:>9.1f}")
+
+
+def run(csv_rows):
+    t0 = time.time()
+    cells = load_cells()
+    if not cells:
+        print(f"\n-- Roofline: no dry-run results at {RESULTS}; run "
+              f"`python -m repro.launch.dryrun --all` first --")
+        csv_rows.append(("roofline", 0.0, "no_dryrun_results"))
+        return None
+    single = table(cells, "single")
+    multi = table(cells, "multi")
+    print_table(single, "single-pod 16x16 (256 chips), baseline variant")
+    print_table(multi, "multi-pod 2x16x16 (512 chips), baseline variant")
+
+    # variant comparison for hillclimbed cells
+    variants = sorted({v for (_, _, _, v) in cells if v != "base"})
+    for v in variants:
+        rows = table(cells, "single", v)
+        if rows:
+            print_table(rows, f"single-pod, variant={v}")
+
+    doms = [t["dominant"] for _, _, t, _ in single]
+    us = (time.time() - t0) * 1e6
+    csv_rows.append(("roofline", us,
+                     f"cells={len(single)}S+{len(multi)}M "
+                     f"comp={doms.count('compute')} mem={doms.count('memory')} "
+                     f"coll={doms.count('collective')}"))
+    return single, multi
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Runs:
+    fig8_throughput     Fig. 8  — bulk bit-wise throughput, 8 platforms
+    fig9_energy         Fig. 9  — DRAM chip energy per KB
+    table3_reliability  Table 3 — Monte-Carlo process-variation error
+    roofline            brief   — 3-term roofline from the dry-run
+
+Prints each report plus a final ``name,us_per_call,derived`` CSV block.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig8_throughput, fig9_energy, table3_reliability,
+                        roofline)
+
+MODULES = (
+    ("fig8_throughput", fig8_throughput),
+    ("fig9_energy", fig9_energy),
+    ("table3_reliability", table3_reliability),
+    ("roofline", roofline),
+)
+
+
+def main() -> None:
+    csv_rows = []
+    failures = []
+    for name, mod in MODULES:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        try:
+            mod.run(csv_rows)
+        except Exception:  # noqa: BLE001 — report all, fail at the end
+            failures.append(name)
+            traceback.print_exc()
+
+    print(f"\n{'=' * 72}\n== CSV summary (name,us_per_call,derived)\n"
+          f"{'=' * 72}")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("\nAll benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""PIM-offload codesign report: which bulk bit-wise payloads belong in
+the memory fleet, per assigned architecture.
+
+    PYTHONPATH=src python examples/pim_offload_report.py
+
+For every assigned architecture, prices the framework's own bulk-bitwise
+payloads (BitLinear weight sign-planes, 1-bit EF gradient reduction,
+sign-plane copies) on a DRIM-R fleet (AAP streams; paper timing/energy)
+versus executing the same op on the TPU (HBM-bandwidth bound), and
+prints the placement verdict. This is the analysis a deployment team
+runs to decide what to push into processing-in-memory.
+"""
+from repro.configs.registry import ARCHS
+from repro.configs import get_config
+from repro.pim.offload import plan, plan_model_payloads
+
+
+def main():
+    print(f"{'arch':<18}{'payload':<26}{'bits':>10}{'DRIM':>11}"
+          f"{'TPU':>11}{'speedup':>9}  winner")
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for name, rep in plan_model_payloads(cfg).items():
+            print(f"{arch:<18}{name:<26}{rep.n_bits:>10.2e}"
+                  f"{rep.drim_latency_s * 1e3:>9.2f}ms"
+                  f"{rep.tpu_latency_s * 1e3:>9.2f}ms"
+                  f"{rep.speedup:>9.2f}  {rep.winner}")
+
+    print("\n-- locality sensitivity (1 Gbit xnor2) --")
+    for in_dram in (True, False):
+        rep = plan("xnor2", 2**30, operands_in_dram=in_dram)
+        print(f"operands_in_dram={in_dram!s:<6} DRIM "
+              f"{rep.drim_latency_s * 1e3:7.3f} ms vs TPU "
+              f"{rep.tpu_latency_s * 1e3:7.3f} ms -> {rep.winner}")
+    print("\nVerdict: PIM wins when operands already live in DRAM and the"
+          "\nresult stays there; staging through the host erases the win.")
+
+
+if __name__ == "__main__":
+    main()

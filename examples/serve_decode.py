@@ -1,0 +1,32 @@
+"""Batched serving example: prefill a prompt batch, decode greedily.
+
+    PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-14b  # smoke
+
+Drives the production serving path (static-shape KV caches, jitted
+prefill + decode steps, batched sampling) on a CPU-scale config. Any
+assigned architecture id works — smoke-config geometry keeps it laptop-
+sized; the same code path lowers at full scale in the multi-pod dry-run.
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="drim-bnn")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args, extra = ap.parse_known_args()
+
+    argv = ["--arch", args.arch, "--smoke-config",
+            "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen), "--mesh", "host"] + extra
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: train the paper-app BNN LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_bnn_lm.py            # ~100M model
+    PYTHONPATH=src python examples/train_bnn_lm.py --quick    # CI scale
+
+drim-bnn is the paper's own application class: an LM whose FFN matmuls
+are BitLinear — sign-binarized weights/activations multiplied with the
+XNOR-popcount identity (straight-through estimator for gradients), i.e.
+the bulk bit-wise X(N)OR workload DRIM accelerates, expressed TPU-native.
+
+The run exercises the full production path: config -> mesh -> synthetic
+data pipeline -> pjit train step (AdamW, cosine schedule, ZeRO-1) ->
+checkpoint every 50 steps -> restart-capable. Loss on the synthetic
+Zipf-LM task should fall from ~ln(V)≈10.4 to <7 within 300 steps.
+"""
+import argparse
+import sys
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced config + 30 steps (CI scale)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--compress", action="store_true",
+                    help="1-bit error-feedback gradient all-reduce")
+    args, extra = ap.parse_known_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="drim_bnn_ckpt_")
+    steps = args.steps or (30 if args.quick else 300)
+    argv = ["--arch", "drim-bnn", "--steps", str(steps),
+            "--batch", "8", "--seq", "256", "--mesh", "host",
+            "--lr", "3e-4", "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", "50", "--log-every", "10"]
+    if args.quick:
+        argv.append("--smoke-config")
+    if args.compress:
+        argv.append("--compress")
+    argv += extra
+
+    print(f"training drim-bnn ({'smoke' if args.quick else '~100M'}) "
+          f"for {steps} steps; checkpoints -> {ckpt_dir}")
+    final_loss = train.main(argv)
+    print(f"final loss {final_loss:.4f}  (checkpoints kept in {ckpt_dir};"
+          f" resume with --resume)")
+    return 0 if final_loss == final_loss else 1  # NaN guard
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from .base import ModelConfig, ShapeConfig, SHAPES, shapes_for
+from .registry import ARCHS, get_config, get_smoke_config

@@ -1,0 +1,174 @@
+"""Config system: ModelConfig dataclass + shape suite + reduced configs.
+
+Every assigned architecture has a module `repro.configs.<id>` exporting
+`CONFIG` (exact published geometry) and `SMOKE_CONFIG` (reduced same-family
+config for CPU smoke tests).  `repro.configs.registry` resolves --arch ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 128
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    # ffn
+    d_ff: int = 0
+    # moe
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # Pad embedding/head vocab dim to a multiple of this (Megatron-style)
+    # so vocab-parallel sharding never falls back to a row-parallel head
+    # (whisper's 51865 costs a full [B,S,V] f32 all-reduce otherwise).
+    # Logical vocab stays cfg.vocab_size; pad logits are masked to -inf.
+    vocab_pad_multiple: int = 128
+    # "flash": Pallas flash-attention kernel for full-sequence attention
+    # on TPU backends (falls back to the XLA path on CPU, where Pallas
+    # requires interpret mode).  "xla": dense-scores path everywhere.
+    attention_impl: str = "flash"
+    # Megatron-style sequence parallelism: the residual stream / norm
+    # segments are sharded S-over-`model`; TP blocks all-gather on entry
+    # and REDUCE-SCATTER on exit (half the wire bytes of the all-reduce
+    # they replace, and the f32 norm segments stop being replicated).
+    seq_parallel: bool = True
+    # "ep": shard_map expert parallelism — per-shard dispatch slab +
+    # psum combine (default; falls back to "grouped" off-mesh).
+    # "grouped": GShard-style per-batch-row dispatch, sharding-constraint
+    # resharding.  "global": single sort over B*S tokens (the §Perf
+    # baseline; forces per-layer all-reduce of the dispatch buffers).
+    moe_dispatch: str = "ep"
+    # mla (deepseek-v3)
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # ssm (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    d_inner: int = 0
+    ssm_head_dim: int = 64
+    # hybrid (zamba2): shared attention block applied every N mamba blocks
+    attn_every: int = 0
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    n_frames: int = 1500        # stub conv frontend output length
+    # vlm (llava): patch embeds prepended by the stub frontend
+    n_patches: int = 0
+    # long-context policy
+    subquadratic: bool = False  # may run long_500k
+    long_context_window: int = 4096  # hybrid attn window at >=128k ctx
+    # the paper's technique as a first-class switch
+    bitlinear: str = "none"     # none | ffn | attn | all
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    # Unroll the layer scans (used by the dry-run cost probes: XLA's
+    # cost_analysis counts a while body once, so probes lower 1-/2-layer
+    # unrolled graphs and extrapolate exact per-step costs).
+    scan_unroll: bool = False
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.d_inner else 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + trunk + head)."""
+        d, v, L = self.d_model, self.vocab_size, self.n_layers
+        n = 2 * v * d  # embed + head
+        per_layer = 0
+        if self.family in ("dense", "vlm", "audio", "moe"):
+            if self.mla:
+                attn = (d * self.q_lora_rank
+                        + self.q_lora_rank * self.n_heads
+                        * (self.qk_nope_dim + self.qk_rope_dim)
+                        + d * (self.kv_lora_rank + self.qk_rope_dim)
+                        + self.kv_lora_rank * self.n_heads
+                        * (self.qk_nope_dim + self.v_head_dim)
+                        + self.n_heads * self.v_head_dim * d)
+            else:
+                attn = (d * self.n_heads * self.d_head
+                        + 2 * d * self.n_kv_heads * self.d_head
+                        + self.n_heads * self.d_head * d)
+            if self.family == "moe":
+                ffn = (d * self.n_experts + 3 * self.n_experts * d
+                       * self.moe_d_ff
+                       + 3 * self.n_shared_experts * d * self.moe_d_ff)
+            else:
+                ffn = 3 * d * self.d_ff
+            per_layer = attn + ffn
+        elif self.family == "ssm":
+            ci = self.d_inner + 2 * self.ssm_state
+            per_layer = (d * (2 * self.d_inner + 2 * self.ssm_state
+                              + self.ssm_heads)
+                         + self.ssm_conv * ci + self.d_inner * d)
+        elif self.family == "hybrid":
+            ci = self.d_inner + 2 * self.ssm_state
+            per_layer = (d * (2 * self.d_inner + 2 * self.ssm_state
+                              + self.ssm_heads)
+                         + self.ssm_conv * ci + self.d_inner * d)
+            shared = (4 * d * self.n_heads * self.d_head
+                      + 3 * d * self.d_ff)
+            n += shared  # one shared transformer block
+        n += L * per_layer
+        if self.family == "audio":
+            n += self.encoder_layers * per_layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        all_experts = L * 3 * self.n_experts * d * self.moe_d_ff
+        active = L * 3 * self.top_k * d * self.moe_d_ff
+        return full - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shapes_for(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Applicable shape cells for an arch (long_500k needs sub-quadratic)."""
+    base = ("train_4k", "prefill_32k", "decode_32k")
+    return base + ("long_500k",) if cfg.subquadratic else base

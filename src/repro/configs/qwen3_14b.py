@@ -1,0 +1,11 @@
+"""qwen3-14b [dense] — qk_norm, GQA kv=8 [hf:Qwen/Qwen3-8B; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen3-14b", family="dense", n_layers=40, d_model=5120,
+    n_heads=40, n_kv_heads=8, d_head=128, d_ff=17408, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6)
+
+SMOKE_CONFIG = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=256, vocab_size=512)

@@ -1,0 +1,21 @@
+"""DRIM core: bit-accurate sub-array model, analog SA, AAP ISA, models.
+
+The paper's primary contribution (Dual-Row Activation single-cycle
+in-DRAM X(N)OR) lives here as a composable JAX module.
+"""
+from .subarray import (SubArray, make_subarray, load_rows, activate_read,
+                       aap_copy, aap_copy2, aap_dra, aap_tra,
+                       pack_bits, unpack_bits, WORD_BITS)
+from .isa import (AAP, OP_COPY, OP_COPY2, OP_DRA, OP_TRA, encode, cost,
+                  run_program, run_program_py, AAP_COUNTS,
+                  microprogram_copy, microprogram_not, microprogram_maj3,
+                  microprogram_min3, microprogram_xnor2, microprogram_xor2,
+                  microprogram_add, multibit_add_program)
+from .analog import (AnalogParams, dra_analog, tra_analog,
+                     monte_carlo_error_rates, PAPER_TABLE3)
+from .timing import (DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits,
+                     drim_latency_s, area_report, T_AAP_S)
+from .platforms import all_platforms, Platform, PAPER_CLAIMS, CONTEXT_CLAIMS
+from .energy import (energy_table, pim_energy_nj_per_kb,
+                     cpu_energy_nj_per_kb, ddr4_copy_energy_nj_per_kb,
+                     PAPER_ENERGY_CLAIMS)

@@ -1,0 +1,72 @@
+"""DRAM-chip energy model (paper §3.4, Fig. 9) — energy per Kilo-Byte.
+
+Anchors (documented derivation, see EXPERIMENTS.md):
+
+  * E_AAP     = 1.58 nJ per KB of row data per AAP cycle — Ambit-class
+                row-activation energy (8 KB row ACT+PRE ≈ 13 nJ).
+  * E_access  = 60 nJ per KB moved — DRAM *chip* energy of a conventional
+                read/write stream (ACT/PRE amortized + burst I/O gating),
+                processor energy excluded (paper Fig. 9 footnote).
+  * E_io      = 104 nJ per KB moved — DDR4 interface (~12.7 pJ/bit)
+                on top of chip energy, paid when data crosses the bus.
+
+With Table-2 AAP counts these reproduce the paper's Fig. 9 ratios:
+  DRIM xnor2 = 3 E_AAP = 4.75 nJ/KB ; Ambit = 7 E_AAP -> 2.33x (paper 2.4x)
+  DDR4 copy  = 2 (E_access + E_io) = 328 nJ/KB -> 69x DRIM xnor2 (paper 69x)
+  CPU add    = 5 KB moved x E_access = 300 nJ/KB -> 27x DRIM add (paper 27x)
+  DRISA-1T1C: latch/add-on cycles cost ~0.8 E_AAP -> 1.6x DRIM on xnor2.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+E_AAP_NJ_PER_KB = 1.58
+E_ACCESS_NJ_PER_KB = 60.0
+E_IO_NJ_PER_KB = 104.0
+
+# AAP(-equivalent) energy cycles per op.  DRISA-1T1C's second cycle is a
+# latch+logic sense, cheaper than a full AAP (0.8x) — calibrated to the
+# paper's 1.6x/1.7x claims.
+_PIM_ENERGY_CYCLES = {
+    "DRIM":       {"not": 2.0, "xnor2": 3.0, "add": 7.0},
+    "Ambit":      {"not": 2.0, "xnor2": 7.0, "add": 14.0},
+    "DRISA-1T1C": {"not": 2.0, "xnor2": 4.8, "add": 12.0},
+}
+
+_BITS_MOVED = {"not": 2.0, "xnor2": 3.0, "add": 5.0}
+
+
+def pim_energy_nj_per_kb(platform: str, op: str) -> float:
+    return _PIM_ENERGY_CYCLES[platform][op] * E_AAP_NJ_PER_KB
+
+
+def cpu_energy_nj_per_kb(op: str) -> float:
+    """DRAM-chip energy of the CPU path (moves operands over the bus)."""
+    return _BITS_MOVED[op] * E_ACCESS_NJ_PER_KB
+
+
+def ddr4_copy_energy_nj_per_kb() -> float:
+    """Copy 1 KB through the DDR4 interface: read + write, chip + I/O."""
+    return 2.0 * (E_ACCESS_NJ_PER_KB + E_IO_NJ_PER_KB)
+
+
+def energy_table() -> Dict[str, Dict[str, float]]:
+    """Fig. 9: nJ per KB for each platform x op."""
+    table: Dict[str, Dict[str, float]] = {}
+    for plat in _PIM_ENERGY_CYCLES:
+        table[plat] = {op: pim_energy_nj_per_kb(plat, op)
+                       for op in ("not", "xnor2", "add")}
+    table["CPU"] = {op: cpu_energy_nj_per_kb(op)
+                    for op in ("not", "xnor2", "add")}
+    table["DDR4-copy"] = {"copy": ddr4_copy_energy_nj_per_kb()}
+    return table
+
+
+PAPER_ENERGY_CLAIMS = {
+    ("Ambit", "DRIM", "xnor2"): 2.4,
+    ("DRISA-1T1C", "DRIM", "xnor2"): 1.6,
+    ("DDR4-copy", "DRIM", "xnor2"): 69.0,
+    ("Ambit", "DRIM", "add"): 2.0,
+    ("DRISA-1T1C", "DRIM", "add"): 1.7,
+    ("CPU", "DRIM", "add"): 27.0,
+}

@@ -1,0 +1,220 @@
+"""DRIM AAP instruction set (§3.2) + Table-2 microprograms + interpreter.
+
+Four AAP (ACTIVATE-ACTIVATE-PRECHARGE) instruction types:
+
+  type-1  AAP(src, des)              copy / NOT (via DCC word-lines)
+  type-2  AAP(src, des1, des2)       double-copy
+  type-3  AAP(src1, src2, des)       DRA  -> X(N)OR
+  type-4  AAP(src1, src2, src3, des) TRA  -> MAJ3
+
+A program is a list of `AAP` records; `encode()` packs it into an int32
+[n, 5] array runnable under `jax.lax.scan` (`run_program`), and
+`run_program_py` executes it eagerly for debugging.  `cost()` returns the
+(n_aap, breakdown) used by the timing/energy models — every instruction
+costs exactly one AAP cycle regardless of type (same ACT-ACT-PRE envelope,
+paper §3.2).
+
+Control-bit status (paper Table 1) is tracked per instruction for the
+controller model: W/R-Copy-NOT-TRA -> (En_M=1, En_x=1, En_C=0);
+DRA -> (En_M=0, En_x=1, En_C=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .subarray import (SubArray, aap_copy, aap_copy2, aap_dra, aap_tra)
+
+OP_COPY, OP_COPY2, OP_DRA, OP_TRA = 0, 1, 2, 3
+
+# Paper Table 1 — enable-bit configuration in the sense-amplification state.
+ENABLE_BITS = {
+    OP_COPY: dict(En_M=1, En_x=1, En_C=0),
+    OP_COPY2: dict(En_M=1, En_x=1, En_C=0),
+    OP_DRA: dict(En_M=0, En_x=1, En_C=1),
+    OP_TRA: dict(En_M=1, En_x=1, En_C=0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AAP:
+    op: int
+    args: Tuple[int, ...]
+
+    def __post_init__(self):
+        n = {OP_COPY: 2, OP_COPY2: 3, OP_DRA: 3, OP_TRA: 4}[self.op]
+        if len(self.args) != n:
+            raise ValueError(f"op {self.op} takes {n} addresses")
+
+
+def encode(program: Sequence[AAP]) -> jax.Array:
+    rows = []
+    for ins in program:
+        a = list(ins.args) + [0] * (4 - len(ins.args))
+        rows.append([ins.op] + a)
+    return jnp.asarray(rows, jnp.int32)
+
+
+def cost(program: Sequence[AAP]) -> Tuple[int, Counter]:
+    c = Counter(ins.op for ins in program)
+    return len(program), c
+
+
+# ---------------------------------------------------------------------------
+# Interpreters
+# ---------------------------------------------------------------------------
+
+def _step(sa: SubArray, ins: jax.Array) -> SubArray:
+    op = ins[0]
+    branches = (
+        lambda s: aap_copy(s, ins[1], ins[2]),
+        lambda s: aap_copy2(s, ins[1], ins[2], ins[3]),
+        lambda s: aap_dra(s, ins[1], ins[2], ins[3]),
+        lambda s: aap_tra(s, ins[1], ins[2], ins[3], ins[4]),
+    )
+    return jax.lax.switch(op, branches, sa)
+
+
+def run_program(sa: SubArray, encoded: jax.Array) -> SubArray:
+    """lax.scan over an encoded [n, 5] command stream (jit-friendly)."""
+    def body(state, ins):
+        return _step(state, ins), None
+    out, _ = jax.lax.scan(body, sa, encoded)
+    return out
+
+
+_PY_DISPATCH = {
+    OP_COPY: aap_copy,
+    OP_COPY2: aap_copy2,
+    OP_DRA: aap_dra,
+    OP_TRA: aap_tra,
+}
+
+
+def run_program_py(sa: SubArray, program: Sequence[AAP]) -> SubArray:
+    """Eager interpreter — direct python dispatch (no switch tracing)."""
+    for ins in program:
+        sa = _PY_DISPATCH[ins.op](sa, *ins.args)
+    return sa
+
+
+# ---------------------------------------------------------------------------
+# Table-2 microprograms.  Addresses are word-line numbers; helpers take the
+# sub-array only to resolve x1..x8 / dcc1..dcc4 aliases.
+# ---------------------------------------------------------------------------
+
+def microprogram_copy(sa: SubArray, d_i: int, d_r: int) -> List[AAP]:
+    return [AAP(OP_COPY, (d_i, d_r))]
+
+
+def microprogram_not(sa: SubArray, d_i: int, d_r: int) -> List[AAP]:
+    # AAP(D_i, dcc2): cell A <- NOT(D_i) via BL̄;  AAP(dcc1, D_r): read back.
+    return [AAP(OP_COPY, (d_i, sa.wl_dcc(2))),
+            AAP(OP_COPY, (sa.wl_dcc(1), d_r))]
+
+
+def microprogram_maj3(sa: SubArray, d_i: int, d_j: int, d_k: int,
+                      d_r: int) -> List[AAP]:
+    return [AAP(OP_COPY, (d_i, sa.wl_x(1))),
+            AAP(OP_COPY, (d_j, sa.wl_x(2))),
+            AAP(OP_COPY, (d_k, sa.wl_x(3))),
+            AAP(OP_TRA, (sa.wl_x(1), sa.wl_x(2), sa.wl_x(3), d_r))]
+
+
+def microprogram_min3(sa: SubArray, d_i: int, d_j: int, d_k: int,
+                      d_r: int) -> List[AAP]:
+    """MIN3 = NOT(MAJ3) using a DCC destination (Table 2 footnote)."""
+    return [AAP(OP_COPY, (d_i, sa.wl_x(1))),
+            AAP(OP_COPY, (d_j, sa.wl_x(2))),
+            AAP(OP_COPY, (d_k, sa.wl_x(3))),
+            AAP(OP_TRA, (sa.wl_x(1), sa.wl_x(2), sa.wl_x(3), sa.wl_dcc(2))),
+            AAP(OP_COPY, (sa.wl_dcc(1), d_r))]
+
+
+def microprogram_xnor2(sa: SubArray, d_i: int, d_j: int, d_r: int) -> List[AAP]:
+    """3 AAPs — the paper's headline: single-cycle DRA, no initialization."""
+    return [AAP(OP_COPY, (d_i, sa.wl_x(1))),
+            AAP(OP_COPY, (d_j, sa.wl_x(2))),
+            AAP(OP_DRA, (sa.wl_x(1), sa.wl_x(2), d_r))]
+
+
+def microprogram_xor2(sa: SubArray, d_i: int, d_j: int, d_r: int) -> List[AAP]:
+    """XOR2 = DRA with the result taken from BL̄, i.e. through a DCC cell."""
+    return [AAP(OP_COPY, (d_i, sa.wl_x(1))),
+            AAP(OP_COPY, (d_j, sa.wl_x(2))),
+            AAP(OP_DRA, (sa.wl_x(1), sa.wl_x(2), sa.wl_dcc(2))),
+            AAP(OP_COPY, (sa.wl_dcc(1), d_r))]
+
+
+def microprogram_add(sa: SubArray, d_i: int, d_j: int, d_k: int,
+                     sum_r: int, cout_r: int) -> List[AAP]:
+    """Full-adder bit-slice, exactly Table 2 (7 AAPs).
+
+    Sum  = D_i ⊕ D_j ⊕ D_k  via two back-to-back DRA-XOR2,
+    Cout = MAJ3(D_i, D_j, D_k) via TRA.
+    Trace: dcc-cell-A(dcc1/2) <- XOR(Di,Dj);  DRA(x6, dcc1) puts
+    XNOR(Dk, XOR(Di,Dj)) on BL and SUM on BL̄ -> stored into cell B via
+    dcc4; read back through dcc3.
+    """
+    return [
+        AAP(OP_COPY2, (d_i, sa.wl_x(1), sa.wl_x(2))),
+        AAP(OP_COPY2, (d_j, sa.wl_x(3), sa.wl_x(4))),
+        AAP(OP_COPY2, (d_k, sa.wl_x(5), sa.wl_x(6))),
+        AAP(OP_DRA, (sa.wl_x(2), sa.wl_x(4), sa.wl_dcc(2))),
+        AAP(OP_DRA, (sa.wl_x(6), sa.wl_dcc(1), sa.wl_dcc(4))),
+        AAP(OP_COPY, (sa.wl_dcc(3), sum_r)),
+        AAP(OP_TRA, (sa.wl_x(1), sa.wl_x(3), sa.wl_x(5), cout_r)),
+    ]
+
+
+def microprogram_and2(sa: SubArray, d_i: int, d_j: int, zero_row: int,
+                      d_r: int) -> List[AAP]:
+    """AND2 on top of TRA with an initialized control row (Ambit-style);
+    kept for completeness — DRIM only uses TRA for MAJ3 (paper §3.1)."""
+    return [AAP(OP_COPY, (d_i, sa.wl_x(1))),
+            AAP(OP_COPY, (d_j, sa.wl_x(2))),
+            AAP(OP_COPY, (zero_row, sa.wl_x(3))),
+            AAP(OP_TRA, (sa.wl_x(1), sa.wl_x(2), sa.wl_x(3), d_r))]
+
+
+def microprogram_or2(sa: SubArray, d_i: int, d_j: int, one_row: int,
+                     d_r: int) -> List[AAP]:
+    return [AAP(OP_COPY, (d_i, sa.wl_x(1))),
+            AAP(OP_COPY, (d_j, sa.wl_x(2))),
+            AAP(OP_COPY, (one_row, sa.wl_x(3))),
+            AAP(OP_TRA, (sa.wl_x(1), sa.wl_x(2), sa.wl_x(3), d_r))]
+
+
+# Canonical AAP counts used by the timing/energy models (paper Table 2).
+AAP_COUNTS = {
+    "copy": 1,
+    "not": 2,
+    "maj3": 4,
+    "xnor2": 3,
+    "xor2": 4,      # +1 AAP to read the BL̄-side result back out of the DCC
+    "add": 7,
+}
+
+
+def multibit_add_program(sa: SubArray, a_rows: Sequence[int],
+                         b_rows: Sequence[int], cin_row: int,
+                         sum_rows: Sequence[int], carry_rows: Sequence[int],
+                         ) -> List[AAP]:
+    """Ripple-carry N-bit adder over bit-plane rows (LSB first).
+
+    a_rows[i], b_rows[i] hold bit i of every element in the row;
+    carry_rows[i] receives the carry out of slice i and feeds slice i+1.
+    7 AAPs per bit-slice (Table 2 full adder).
+    """
+    if not (len(a_rows) == len(b_rows) == len(sum_rows) == len(carry_rows)):
+        raise ValueError("bit-plane row lists must have equal length")
+    prog: List[AAP] = []
+    carry = cin_row
+    for a, b, s, c in zip(a_rows, b_rows, sum_rows, carry_rows):
+        prog += microprogram_add(sa, a, b, carry, s, c)
+        carry = c
+    return prog

@@ -1,0 +1,104 @@
+"""Baseline platform models for the Fig. 8 / Fig. 9 comparisons.
+
+Von-Neumann platforms (CPU / GPU / HMC) are *bandwidth-bound* on bulk
+bit-wise streams: throughput = effective_bw / bytes_moved_per_output_byte.
+PIM platforms share DRIM's DRAM geometry and differ only in the command
+count per operation:
+
+  op      DRIM  Ambit  DRISA-1T1C  DRISA-3T1C    (cycles per row result)
+  not       2     2        2           2
+  xnor2     3     7        6          11
+  add       7    14       12          22
+
+  * Ambit [2]: X(N)OR via TRA AND/OR + DCC NOT needs row-init + 2 TRA
+    rounds — 7 AAPs (its add: MAJ + 2 Ambit-XORs ≈ 14).
+  * DRISA-1T1C [3]: XNOR add-on gate at the SA, but every op is
+    inherently 2-cycle (read-latch, then sense-compute) plus operand
+    staging/copy-back — 6 cycles per XNOR row, and no TRA so add costs 12.
+  * DRISA-3T1C [3]: NOR-only fabric; XOR2 = 5 NOR2 levels with copy-backs
+    — 11 cycles; add ≈ 22.
+
+These counts reproduce the paper's reported X(N)OR speedups (2.3x Ambit =
+7/3, 1.9x DRISA-1T1C ≈ 6/3, 3.7x DRISA-3T1C = 11/3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .timing import DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits
+
+# Bits moved per output bit on a load/store architecture.  `add` is
+# word-parallel on CPUs/GPUs (a 64-bit ALU add costs the same traffic as a
+# 64-bit XOR: read two operands, non-temporal-store one result), so its
+# traffic equals xnor2 — unlike the PIM platforms, where add is bit-serial.
+_BITS_MOVED = {"not": 2.0, "xnor2": 3.0, "add": 3.0}
+
+# Effective streaming bandwidths (bytes/s).
+CPU_BW = 34.1e9  # Core-i7: 2 ch DDR4-2133 peak, NT stores (no RFO traffic)
+GPU_BW = 290e9   # GTX 1080 Ti, 352-bit GDDR5X 484 GB/s peak, ~60% achieved
+HMC_BW = 850e9   # HMC 2.0 aggregate internal TSV bandwidth seen by the
+                 # vault logic.  The external links are 32 x 10 GB/s, but
+                 # in-vault ops run at stacked-DRAM-layer bandwidth;
+                 # calibrated to the paper's quoted "HMC ~25x CPU" (§3.4).
+
+PIM_CYCLES: Dict[str, Dict[str, int]] = {
+    "DRIM":       {"not": 2, "xnor2": 3, "add": 7},
+    "Ambit":      {"not": 2, "xnor2": 7, "add": 14},
+    "DRISA-1T1C": {"not": 2, "xnor2": 6, "add": 12},
+    "DRISA-3T1C": {"not": 2, "xnor2": 11, "add": 22},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    kind: str  # "bw" (bandwidth-bound) or "pim"
+    bw: float = 0.0
+    geom: DrimGeometry | None = None
+    cycles: Dict[str, int] | None = None
+
+    def throughput_bits(self, op: str) -> float:
+        if self.kind == "bw":
+            return self.bw * 8.0 / _BITS_MOVED[op]
+        assert self.geom is not None and self.cycles is not None
+        return self.geom.parallel_bits / (self.cycles[op] * self.geom.t_aap_s)
+
+
+def all_platforms() -> Dict[str, Platform]:
+    return {
+        "CPU": Platform("CPU", "bw", bw=CPU_BW),
+        "GPU": Platform("GPU", "bw", bw=GPU_BW),
+        "HMC": Platform("HMC", "bw", bw=HMC_BW),
+        "Ambit": Platform("Ambit", "pim", geom=DRIM_R,
+                          cycles=PIM_CYCLES["Ambit"]),
+        "DRISA-1T1C": Platform("DRISA-1T1C", "pim", geom=DRIM_R,
+                               cycles=PIM_CYCLES["DRISA-1T1C"]),
+        "DRISA-3T1C": Platform("DRISA-3T1C", "pim", geom=DRIM_R,
+                               cycles=PIM_CYCLES["DRISA-3T1C"]),
+        "DRIM-R": Platform("DRIM-R", "pim", geom=DRIM_R,
+                           cycles=PIM_CYCLES["DRIM"]),
+        "DRIM-S": Platform("DRIM-S", "pim", geom=DRIM_S,
+                           cycles=PIM_CYCLES["DRIM"]),
+    }
+
+
+# Paper Fig. 8 headline ratios, used as assertions/report targets.
+PAPER_CLAIMS = {
+    ("DRIM-R", "CPU"): 71.0,      # average over {not, xnor2, add}
+    ("DRIM-R", "GPU"): 8.4,
+    ("DRIM-R", "Ambit", "xnor2"): 2.3,
+    ("DRIM-R", "DRISA-1T1C", "xnor2"): 1.9,
+    ("DRIM-R", "DRISA-3T1C", "xnor2"): 3.7,
+    ("DRIM-S", "HMC"): 13.5,
+    ("HMC", "CPU"): 25.0,
+}
+
+# Context claims quoted by the paper about *prior* platforms.  The paper's
+# "HMC ~6.5x GPU" is mutually inconsistent with its other three ratios
+# under any one-throughput-per-platform model: (HMC/CPU) x (DRIM/GPU) /
+# (DRIM/CPU) pins HMC/GPU = 25 x 8.4 / 71 = 2.96.  We report it separately
+# rather than distorting the platform models to chase it.
+CONTEXT_CLAIMS = {
+    ("HMC", "GPU"): 6.5,
+}

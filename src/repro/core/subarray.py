@@ -1,0 +1,201 @@
+"""Bit-accurate functional model of a DRIM computational DRAM sub-array.
+
+Layout (paper Fig. 3): a 512-row sub-array is split into
+  - rows [0, n_data)           : data rows (typical 1T1C cells)
+  - rows [n_data, n_data + 8)  : computation rows x1..x8 (typical cells,
+                                 driven by the Modified Row Decoder)
+  - 2 physical dual-contact (DCC) rows, each with TWO word-lines
+    (paper §3.4: "two rows of DCCs with two WL associated with each"):
+        dcc1 -> cell A via BL      dcc2 -> cell A via BL̄
+        dcc3 -> cell B via BL      dcc4 -> cell B via BL̄
+
+Rows are bit-packed into uint32 words; every function is pure JAX and
+vmap-able across sub-arrays / banks.  Word-line addressing:
+
+  wl in [0, n_rows)              : normal rows (data + x1..x8)
+  wl in [n_rows, n_rows + 4)     : dcc1..dcc4
+
+Semantics of the BL̄-side word-lines (dcc2/dcc4): the cell capacitor is
+connected to BL̄, so a *write* stores the complement of the BL value and a
+*read* places the complement of the cell onto BL.  This is exactly how the
+paper's NOT (Table 2) and the Sum datapath of the in-memory adder work.
+
+Destructiveness: charge-sharing operations (DRA, TRA) leave every
+participating source capacitor at the final bit-line level (paper Fig. 6),
+i.e. sources are overwritten with the operation result.  This is why the
+Table-2 adder microprogram double-copies its operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+# Computation-row aliases (paper Fig. 3): offsets *within* the x-region.
+N_XROWS = 8
+N_DCC_WL = 4
+
+
+def row_words(row_bits: int) -> int:
+    if row_bits % WORD_BITS:
+        raise ValueError(f"row_bits must be a multiple of {WORD_BITS}")
+    return row_bits // WORD_BITS
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SubArray:
+    """State of one computational sub-array (bit-packed)."""
+
+    data: jax.Array  # [n_rows, words] uint32 — data rows + x1..x8
+    dcc: jax.Array   # [2, words]      uint32 — DCC cells A and B
+
+    @property
+    def n_rows(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def words(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def row_bits(self) -> int:
+        return self.words * WORD_BITS
+
+    # -- word-line address helpers (static python ints ok, traced ok) ------
+    def wl_dcc(self, k: int) -> int:
+        """Word-line address of dcc{k}, k in 1..4."""
+        return self.n_rows + (k - 1)
+
+    def wl_x(self, k: int) -> int:
+        """Word-line address of x{k}, k in 1..8 (paper Fig. 3)."""
+        return self.n_rows - N_XROWS + (k - 1)
+
+
+def make_subarray(n_data: int = 500, row_bits: int = 256) -> SubArray:
+    """Fresh sub-array: n_data data rows + 8 x-rows, all zero."""
+    w = row_words(row_bits)
+    return SubArray(
+        data=jnp.zeros((n_data + N_XROWS, w), jnp.uint32),
+        dcc=jnp.zeros((2, w), jnp.uint32),
+    )
+
+
+def load_rows(sa: SubArray, start: int, rows: jax.Array) -> SubArray:
+    """Host-side data load (models the DDR write path, not an AAP)."""
+    rows = rows.astype(jnp.uint32)
+    return dataclasses.replace(
+        sa, data=jax.lax.dynamic_update_slice(sa.data, rows, (start, 0))
+    )
+
+
+# ---------------------------------------------------------------------------
+# ACTIVATE: place a word-line's value on the bit-line (digital fast path).
+# ---------------------------------------------------------------------------
+
+def _dcc_split(sa: SubArray, wl) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(is_dcc, cell_index, is_blbar_side) for a (possibly traced) wl."""
+    wl = jnp.asarray(wl, jnp.int32)
+    is_dcc = wl >= sa.n_rows
+    off = jnp.maximum(wl - sa.n_rows, 0)
+    return is_dcc, off // 2, (off % 2) == 1
+
+
+def activate_read(sa: SubArray, wl) -> jax.Array:
+    """Sense amplification of one row: returns the value ON THE BIT-LINE."""
+    is_dcc, cell, blbar = _dcc_split(sa, wl)
+    normal = sa.data[jnp.minimum(jnp.asarray(wl, jnp.int32), sa.n_rows - 1)]
+    dcc_val = sa.dcc[cell]
+    dcc_bl = jnp.where(blbar, ~dcc_val, dcc_val)
+    return jnp.where(is_dcc, dcc_bl, normal).astype(jnp.uint32)
+
+
+def _write_wl(sa: SubArray, wl, bl_value: jax.Array) -> SubArray:
+    """Second ACTIVATE of an AAP: connect `wl`'s capacitor to its bit-line
+    while the SA drives BL=bl_value, BL̄=~bl_value."""
+    wl = jnp.asarray(wl, jnp.int32)
+    is_dcc, cell, blbar = _dcc_split(sa, wl)
+    bl_value = bl_value.astype(jnp.uint32)
+
+    # Normal-row path (masked no-op when the target is a DCC word-line).
+    idx = jnp.minimum(wl, sa.n_rows - 1)
+    new_row = jnp.where(is_dcc, sa.data[idx], bl_value)
+    data = sa.data.at[idx].set(new_row)
+
+    # DCC path: BL̄-side WLs store the complement of the BL value.
+    stored = jnp.where(blbar, ~bl_value, bl_value)
+    new_cell = jnp.where(is_dcc, stored, sa.dcc[cell])
+    dcc = sa.dcc.at[cell].set(new_cell)
+    return SubArray(data=data, dcc=dcc)
+
+
+# ---------------------------------------------------------------------------
+# AAP primitives (paper §3.2) — digital fast path.
+# ---------------------------------------------------------------------------
+
+def aap_copy(sa: SubArray, src, des) -> SubArray:
+    """AAP type-1: ACTIVATE src, ACTIVATE des, PRECHARGE.  Copy/NOT."""
+    return _write_wl(sa, des, activate_read(sa, src))
+
+
+def aap_copy2(sa: SubArray, src, des1, des2) -> SubArray:
+    """AAP type-2: one source, two destinations (simultaneous)."""
+    bl = activate_read(sa, src)
+    return _write_wl(_write_wl(sa, des1, bl), des2, bl)
+
+
+def aap_dra(sa: SubArray, src1, src2, des) -> SubArray:
+    """AAP type-3: Dual-Row Activation (the paper's contribution, §3.1).
+
+    Charge-share src1/src2 on the BL; the reconfigurable SA (En_C=En_x=1,
+    En_M=0) computes  BL = XNOR(a, b),  BL̄ = XOR(a, b)  in ONE cycle with
+    no row initialization (Eq. 1).  Both source capacitors end at the BL
+    level (Fig. 6) => sources are overwritten with XNOR(a, b).
+    """
+    a = activate_read(sa, src1)
+    b = activate_read(sa, src2)
+    bl = ~(a ^ b)  # XNOR on BL; the SA drives BL̄ = XOR automatically
+    sa = _write_wl(sa, src1, bl)
+    sa = _write_wl(sa, src2, bl)
+    return _write_wl(sa, des, bl)
+
+
+def aap_tra(sa: SubArray, src1, src2, src3, des) -> SubArray:
+    """AAP type-4: Ambit-style Triple-Row Activation => MAJ3 on the BL.
+
+    All three source capacitors end at the majority level.
+    """
+    a = activate_read(sa, src1)
+    b = activate_read(sa, src2)
+    c = activate_read(sa, src3)
+    bl = (a & b) | (a & c) | (b & c)
+    sa = _write_wl(sa, src1, bl)
+    sa = _write_wl(sa, src2, bl)
+    sa = _write_wl(sa, src3, bl)
+    return _write_wl(sa, des, bl)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing helpers (host <-> sub-array layout)
+# ---------------------------------------------------------------------------
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """[..., n*32] {0,1} -> [..., n] uint32 (bit 0 = LSB of word 0)."""
+    *lead, n = bits.shape
+    if n % WORD_BITS:
+        raise ValueError("bit length must be a multiple of 32")
+    b = bits.reshape(*lead, n // WORD_BITS, WORD_BITS).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return (b * weights).sum(-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array) -> jax.Array:
+    """[..., n] uint32 -> [..., n*32] {0,1} uint32."""
+    *lead, n = words.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*lead, n * WORD_BITS)

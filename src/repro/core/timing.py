@@ -1,0 +1,79 @@
+"""DRAM geometry + timing model for DRIM throughput (paper §3.4, Fig. 8).
+
+The throughput of a processing-in-DRAM platform is
+
+    T_op [bit/s] = (active sub-arrays × row_bits) / (n_AAP(op) × t_AAP)
+
+— every sub-array in every bank computes one row-wide bulk op per AAP
+sequence, and all of them operate in lock-step (the paper's "maximum
+internal bandwidth and memory-level parallelism").
+
+Calibration constants and where they come from:
+  * t_AAP = 90 ns       — RowClone-FPM ACTIVATE→ACTIVATE→PRECHARGE ([17],
+                          quoted in §2.1; Ambit's 4-AAP AND = "averagely
+                          360ns" confirms 90 ns/AAP).
+  * per-op AAP counts   — Table 2 (DRIM), Ambit paper (7 AAPs for X(N)OR),
+                          DRISA NOR-style sequences; see `platforms.py`.
+  * geometry            — §3.4: 8 banks, 512×256 computational sub-arrays.
+    `subarrays_per_bank` is the one free parameter (not stated in the
+    paper); 1024 sub-arrays/bank reproduces the paper's CPU/GPU ratios to
+    within the reading error of Fig. 8 (log scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .isa import AAP_COUNTS
+
+T_AAP_S = 90e-9  # seconds per AAP (ACT-ACT-PRE envelope)
+
+
+@dataclasses.dataclass(frozen=True)
+class DrimGeometry:
+    banks: int = 8
+    subarrays_per_bank: int = 1024
+    row_bits: int = 256          # 512 rows x 256 bit-lines (paper §3.4)
+    t_aap_s: float = T_AAP_S
+
+    @property
+    def parallel_bits(self) -> int:
+        return self.banks * self.subarrays_per_bank * self.row_bits
+
+
+# DRIM-R: regular DDR4-class chip.  DRIM-S: 3D-stacked, 256 banks in 4 GB
+# (§3.4).  A 3D stack cannot activate every sub-array of every bank at
+# once — the thermal/power envelope of an HMC-class cube caps concurrent
+# row activation; `subarrays_per_bank` for DRIM-S is the number of
+# *concurrently computing* sub-arrays per bank (~15% of the 1024 present),
+# calibrated to the paper's "DRIM-S boosts HMC by ~13.5x" claim, which the
+# paper states without giving the concurrency it assumed.
+DRIM_R = DrimGeometry(banks=8)
+DRIM_S = DrimGeometry(banks=256, subarrays_per_bank=152)
+
+
+def drim_throughput_bits(geom: DrimGeometry, op: str) -> float:
+    """Output bits per second for a bulk bit-wise op on DRIM."""
+    n_aap = AAP_COUNTS[op]
+    return geom.parallel_bits / (n_aap * geom.t_aap_s)
+
+
+def drim_latency_s(geom: DrimGeometry, op: str, n_bits: int) -> float:
+    """Latency to process an n_bits bulk operand vector."""
+    waves = -(-n_bits // geom.parallel_bits)  # ceil
+    return waves * AAP_COUNTS[op] * geom.t_aap_s
+
+
+# ---------------------------------------------------------------------------
+# Area model (paper §3.4) — reported, not simulated.
+# ---------------------------------------------------------------------------
+
+def area_report() -> Dict[str, str]:
+    return {
+        "sa_addon_transistors_per_BL": "22",
+        "dcc_rows": "2 rows (4 word-lines), ~1T/BL each",
+        "modified_row_decoder": "4:12 MRD, +2T per WL driver buffer chain",
+        "ctrl_mux_transistors": "6",
+        "equivalent_rows_per_subarray": "24",
+        "dram_chip_area_overhead": "~9.3%",
+    }

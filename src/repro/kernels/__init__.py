@@ -1,0 +1,9 @@
+"""DRIM-X Pallas TPU kernels (+ jnp reference oracles).
+
+Each kernel module ships pl.pallas_call + explicit BlockSpec VMEM tiling;
+ops.py is the jit'd dispatch wrapper; ref.py the pure-jnp oracles.
+"""
+from . import ops, ref
+from .ops import (bitwise, xnor, maj3, full_adder, pack_signs, unpack_signs,
+                  xnor_gemm_packed, binary_matmul, bitplane_add, popcount)
+from .flash_attention import flash_attention

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: bulk bit-serial ripple-carry adder on bit-planes.
+
+The DRIM in-memory adder (paper §3.1, Table 2) computes, per bit-slice,
+Sum = Di ⊕ Dj ⊕ Dk (two DRA-XOR2) and Cout = MAJ3 (one TRA) — 7 AAPs per
+slice.  This kernel is the TPU transplant: operands are stored as packed
+bit-planes [nbits, W] and the full ripple-carry chain for a tile of W
+words runs inside VMEM in one kernel invocation (the carry never touches
+HBM — the analogue of the carry staying inside the sub-array's DCC rows).
+
+nbits is a compile-time constant; the plane loop is unrolled so the VPU
+sees a straight line of and/or/xor ops per word.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048  # words per grid step (uint32 lanes)
+
+
+def _add_kernel(a_ref, b_ref, s_ref, c_ref, *, nbits):
+    carry = jnp.zeros_like(a_ref[0, :])
+    for i in range(nbits):  # unrolled FA chain (Table 2 per slice)
+        a, b = a_ref[i, :], b_ref[i, :]
+        s_ref[i, :] = a ^ b ^ carry
+        carry = (a & b) | (a & carry) | (b & carry)
+    c_ref[...] = carry[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitplane_add(a_planes: jax.Array, b_planes: jax.Array, *,
+                 interpret: bool = False):
+    """(sum_planes [nbits, W], carry_out [W]) for packed bit-planes."""
+    nbits, w = a_planes.shape
+    wp = pl.cdiv(w, BLOCK) * BLOCK
+    a2 = jnp.pad(a_planes.astype(jnp.uint32), ((0, 0), (0, wp - w)))
+    b2 = jnp.pad(b_planes.astype(jnp.uint32), ((0, 0), (0, wp - w)))
+    grid = (wp // BLOCK,)
+    plane_spec = pl.BlockSpec((nbits, BLOCK), lambda j: (0, j))
+    carry_spec = pl.BlockSpec((1, BLOCK), lambda j: (0, j))
+    s, c = pl.pallas_call(
+        functools.partial(_add_kernel, nbits=nbits), grid=grid,
+        in_specs=[plane_spec, plane_spec],
+        out_specs=[plane_spec, carry_spec],
+        out_shape=[jax.ShapeDtypeStruct((nbits, wp), jnp.uint32),
+                   jax.ShapeDtypeStruct((1, wp), jnp.uint32)],
+        interpret=interpret,
+    )(a2, b2)
+    return s[:, :w], c[0, :w]

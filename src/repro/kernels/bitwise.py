@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused bulk bit-wise ops on bit-packed uint32 words.
+
+TPU-native adaptation of the DRIM bulk engine (DESIGN.md §2): one DRIM
+sub-array produces `row_bits` X(N)OR bits per 3-AAP sequence; on TPU the
+same bulk op is vectorized over the 8x128 VPU lanes at 32 bits/lane.  The
+kernel tiles bit-packed operands HBM->VMEM with an explicit BlockSpec and
+fuses the whole DRIM op table (XNOR/XOR/MAJ3/NOT/AND/OR/full-adder) into
+one pass so each word is touched exactly once — the "no row
+initialization, single cycle" property of DRA, transplanted to VMEM.
+
+Ops are selected statically (compile-time branch), mirroring the DRIM
+controller's enable bits (Table 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shape: 8 sublanes x 1024 lane-words = 32 KiB/operand in VMEM,
+# well under the ~16 MiB VMEM budget even with 3 operands + 2 outputs.
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+
+BINARY_OPS = ("xnor", "xor", "and", "or", "nand", "nor")
+TERNARY_OPS = ("maj3", "min3", "fa")  # fa: full-adder (sum, carry)
+UNARY_OPS = ("not",)
+
+
+def _binary_kernel(op: str, a_ref, b_ref, o_ref):
+    a, b = a_ref[...], b_ref[...]
+    if op == "xnor":
+        o_ref[...] = ~(a ^ b)
+    elif op == "xor":
+        o_ref[...] = a ^ b
+    elif op == "and":
+        o_ref[...] = a & b
+    elif op == "or":
+        o_ref[...] = a | b
+    elif op == "nand":
+        o_ref[...] = ~(a & b)
+    elif op == "nor":
+        o_ref[...] = ~(a | b)
+    else:
+        raise ValueError(op)
+
+
+def _ternary_kernel(op: str, a_ref, b_ref, c_ref, o_ref, o2_ref=None):
+    a, b, c = a_ref[...], b_ref[...], c_ref[...]
+    maj = (a & b) | (a & c) | (b & c)
+    if op == "maj3":
+        o_ref[...] = maj
+    elif op == "min3":
+        o_ref[...] = ~maj
+    elif op == "fa":  # DRIM adder: Sum via 2xDRA-XOR, Cout via TRA-MAJ3
+        o_ref[...] = a ^ b ^ c
+        o2_ref[...] = maj
+    else:
+        raise ValueError(op)
+
+
+def _not_kernel(a_ref, o_ref):
+    o_ref[...] = ~a_ref[...]
+
+
+def _grid_spec(shape, n_in, n_out):
+    rows, cols = shape
+    grid = (pl.cdiv(rows, BLOCK_ROWS), pl.cdiv(cols, BLOCK_COLS))
+    spec = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i, j: (i, j))
+    return grid, [spec] * n_in, [spec] * n_out if n_out > 1 else spec
+
+
+def _pad2d(x):
+    """Reshape any packed array to 2D [rows, cols] padded to block size."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = BLOCK_COLS
+    rows = pl.cdiv(n, cols)
+    pad = rows * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    rows_p = pl.cdiv(rows, BLOCK_ROWS) * BLOCK_ROWS
+    out = jnp.pad(flat.reshape(rows, cols), ((0, rows_p - rows), (0, 0)))
+    return out, n
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def bitwise(op: str, a: jax.Array, b: jax.Array | None = None,
+            c: jax.Array | None = None, *, interpret: bool = False):
+    """Bulk bit-wise `op` on bit-packed uint32 arrays of identical shape.
+
+    Returns an array like `a`; for op='fa' returns (sum, carry).
+    """
+    orig_shape = a.shape
+    a2, n = _pad2d(a.astype(jnp.uint32))
+    shape = a2.shape
+    out_sd = jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+    if op in UNARY_OPS:
+        grid, in_specs, out_spec = _grid_spec(shape, 1, 1)
+        res = pl.pallas_call(_not_kernel, grid=grid, in_specs=in_specs,
+                             out_specs=out_spec, out_shape=out_sd,
+                             interpret=interpret)(a2)
+        outs = (res,)
+    elif op in BINARY_OPS:
+        b2, _ = _pad2d(b.astype(jnp.uint32))
+        grid, in_specs, out_spec = _grid_spec(shape, 2, 1)
+        res = pl.pallas_call(functools.partial(_binary_kernel, op),
+                             grid=grid, in_specs=in_specs,
+                             out_specs=out_spec, out_shape=out_sd,
+                             interpret=interpret)(a2, b2)
+        outs = (res,)
+    elif op in TERNARY_OPS:
+        b2, _ = _pad2d(b.astype(jnp.uint32))
+        c2, _ = _pad2d(c.astype(jnp.uint32))
+        n_out = 2 if op == "fa" else 1
+        grid, in_specs, out_spec = _grid_spec(shape, 3, n_out)
+        out_shape = ((out_sd, out_sd) if op == "fa" else out_sd)
+        res = pl.pallas_call(functools.partial(_ternary_kernel, op),
+                             grid=grid, in_specs=in_specs,
+                             out_specs=out_spec, out_shape=out_shape,
+                             interpret=interpret)(a2, b2, c2)
+        outs = res if op == "fa" else (res,)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+
+    outs = tuple(o.reshape(-1)[:n].reshape(orig_shape) for o in outs)
+    return outs if len(outs) > 1 else outs[0]

@@ -1,0 +1,123 @@
+"""Public jit'd wrappers for the DRIM-X kernels with backend dispatch.
+
+Pallas targets TPU (Mosaic); on the CPU build/CI (and in the AOT dry-run,
+which lowers for the host platform) every op falls back to its pure-jnp
+reference — numerically identical by the kernel test suite.  Set
+REPRO_FORCE_PALLAS=interpret to exercise the Pallas path on CPU.
+
+Dispatch matrix:
+    backend==tpu                  -> pallas_call (compiled, Mosaic)
+    REPRO_FORCE_PALLAS=interpret  -> pallas_call (interpret mode)
+    otherwise                     -> ref.py jnp oracle (XLA-fused)
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitwise import bitwise as _bitwise_pallas
+from .bitserial_add import bitplane_add as _bitplane_add_pallas
+from .packbits import pack_signs as _pack_pallas, unpack_signs as _unpack_pallas
+from .xnor_popcount import xnor_gemm_packed as _xnor_gemm_pallas
+
+WORD_BITS = 32
+
+
+def _mode() -> str:
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "interpret":
+        return "interpret"
+    if force == "off":
+        return "ref"
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+# --- bulk bit-wise ops -------------------------------------------------------
+
+def bitwise(op: str, a, b=None, c=None):
+    m = _mode()
+    if m == "ref":
+        return ref.bitwise_ref(op, a, b, c)
+    return _bitwise_pallas(op, a, b, c, interpret=(m == "interpret"))
+
+
+def xnor(a, b):
+    return bitwise("xnor", a, b)
+
+
+def maj3(a, b, c):
+    return bitwise("maj3", a, b, c)
+
+
+def full_adder(a, b, c):
+    return bitwise("fa", a, b, c)
+
+
+# --- pack / unpack -----------------------------------------------------------
+
+def pack_signs(x):
+    """[..., K] -> [..., ceil(K/32)] uint32 sign words (flattens leading)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = _mode()
+    if m == "ref":
+        k = x2.shape[-1]
+        pad = (-k) % WORD_BITS
+        x2 = jnp.pad(x2, ((0, 0), (0, pad)), constant_values=-1.0)
+        out = ref.pack_signs_ref(x2)
+    else:
+        out = _pack_pallas(x2, interpret=(m == "interpret"))
+    return out.reshape(*lead, out.shape[-1])
+
+
+def unpack_signs(p, dtype=jnp.bfloat16):
+    lead = p.shape[:-1]
+    p2 = p.reshape(-1, p.shape[-1])
+    m = _mode()
+    if m == "ref":
+        out = ref.unpack_signs_ref(p2, dtype)
+    else:
+        out = _unpack_pallas(p2, dtype, interpret=(m == "interpret"))
+    return out.reshape(*lead, out.shape[-1])
+
+
+# --- binary GEMM -------------------------------------------------------------
+
+def xnor_gemm_packed(a_packed, b_packed, k_bits: int):
+    """C[M,N] int32 = ±1-dot of packed sign rows (XNOR-popcount identity)."""
+    m = _mode()
+    if m == "ref":
+        return ref.xnor_gemm_ref(a_packed, b_packed, k_bits)
+    return _xnor_gemm_pallas(a_packed, b_packed, k_bits,
+                             interpret=(m == "interpret"))
+
+
+def binary_matmul(x, w_packed, k_bits: int, dtype=jnp.bfloat16):
+    """Dense activations x [..., K] vs bit-packed weights [N, W].
+
+    Binarizes x on the fly (sign), runs the XNOR-popcount GEMM, returns
+    [..., N] in `dtype` (unscaled ±1 dot; layers apply XNOR-Net scaling).
+    """
+    lead = x.shape[:-1]
+    xp = pack_signs(x.reshape(-1, x.shape[-1]))
+    out = xnor_gemm_packed(xp, w_packed, k_bits)
+    return out.astype(dtype).reshape(*lead, w_packed.shape[0])
+
+
+# --- bit-plane adder ---------------------------------------------------------
+
+def bitplane_add(a_planes, b_planes):
+    m = _mode()
+    if m == "ref":
+        return ref.bitplane_add_ref(a_planes, b_planes)
+    return _bitplane_add_pallas(a_planes, b_planes,
+                                interpret=(m == "interpret"))
+
+
+# --- popcount (VPU path, used by hamming-distance style apps) ---------------
+
+def popcount(x):
+    return ref.popcount_u32_ref(x)

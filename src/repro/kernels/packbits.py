@@ -1,0 +1,81 @@
+"""Pallas TPU kernels: sign-bit pack / unpack between dense and packed.
+
+pack_signs  : [R, K] float  -> [R, K/32] uint32   (bit=1 where x >= 0)
+unpack_signs: [R, W] uint32 -> [R, W*32] ±1 dtype
+
+These are bandwidth-bound layout ops (the DRIM "RowClone" analogue: data
+enters the compute-capable layout once, then all bulk ops run on packed
+rows).  The pack kernel processes one 128-lane stripe of 4 output words
+per grid step; both kernels are validated against ref.py oracles in
+interpret mode and exposed through ops.py with a fused jnp fallback for
+non-TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORD_BITS = 32
+BR = 256          # rows per block
+BWORDS = 32       # packed words per block -> 1024 input columns
+
+
+def _pack_kernel(x_ref, o_ref):
+    x = x_ref[...]                       # [BR, BWORDS*32]
+    bits = (x >= 0).astype(jnp.uint32)
+    b3 = bits.reshape(x.shape[0], BWORDS, WORD_BITS)
+    w = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    o_ref[...] = (b3 * w[None, None, :]).sum(-1).astype(jnp.uint32)
+
+
+def _unpack_kernel(p_ref, o_ref, *, dtype):
+    p = p_ref[...]                       # [BR, BWORDS]
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (p[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    pm1 = (bits.astype(jnp.int32) * 2 - 1).astype(dtype)
+    o_ref[...] = pm1.reshape(p.shape[0], p.shape[1] * WORD_BITS)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_signs(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """[R, K] -> [R, ceil(K/32)] uint32 sign-bit words (pad bits = 0)."""
+    r, k = x.shape
+    w = pl.cdiv(k, WORD_BITS)
+    kp = pl.cdiv(w, BWORDS) * BWORDS * WORD_BITS
+    rp = pl.cdiv(r, BR) * BR
+    # pad with -1 so pad bits pack to 0
+    x2 = jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, kp - k)),
+                 constant_values=-1.0)
+    grid = (rp // BR, kp // (BWORDS * WORD_BITS))
+    out = pl.pallas_call(
+        _pack_kernel, grid=grid,
+        in_specs=[pl.BlockSpec((BR, BWORDS * WORD_BITS),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BR, BWORDS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, kp // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(x2)
+    return out[:r, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def unpack_signs(p: jax.Array, dtype=jnp.bfloat16, *,
+                 interpret: bool = False) -> jax.Array:
+    """[R, W] uint32 -> [R, W*32] ±1 values of `dtype`."""
+    r, w = p.shape
+    rp = pl.cdiv(r, BR) * BR
+    wp = pl.cdiv(w, BWORDS) * BWORDS
+    p2 = jnp.pad(p.astype(jnp.uint32), ((0, rp - r), (0, wp - w)))
+    grid = (rp // BR, wp // BWORDS)
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, dtype=dtype), grid=grid,
+        in_specs=[pl.BlockSpec((BR, BWORDS), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BR, BWORDS * WORD_BITS),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp * WORD_BITS), dtype),
+        interpret=interpret,
+    )(p2)
+    return out[:r, :w * WORD_BITS]

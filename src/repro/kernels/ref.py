@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+# --- bitwise.py oracle ------------------------------------------------------
+
+def bitwise_ref(op: str, a, b=None, c=None):
+    a = a.astype(jnp.uint32)
+    if b is not None:
+        b = b.astype(jnp.uint32)
+    if c is not None:
+        c = c.astype(jnp.uint32)
+    if op == "not":
+        return ~a
+    if op == "xnor":
+        return ~(a ^ b)
+    if op == "xor":
+        return a ^ b
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "nand":
+        return ~(a & b)
+    if op == "nor":
+        return ~(a | b)
+    maj = (a & b) | (a & c) | (b & c)
+    if op == "maj3":
+        return maj
+    if op == "min3":
+        return ~maj
+    if op == "fa":
+        return a ^ b ^ c, maj
+    raise ValueError(op)
+
+
+# --- packbits.py oracle -----------------------------------------------------
+
+def pack_signs_ref(x: jax.Array) -> jax.Array:
+    """[..., K] float -> [..., K/32] uint32; bit=1 where x >= 0."""
+    *lead, k = x.shape
+    bits = (x >= 0).astype(jnp.uint32).reshape(*lead, k // WORD_BITS,
+                                               WORD_BITS)
+    w = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return (bits * w).sum(-1, dtype=jnp.uint32)
+
+
+def unpack_signs_ref(p: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """[..., W] uint32 -> [..., W*32] in {-1, +1}."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)
+    pm1 = bits.astype(jnp.float32) * 2.0 - 1.0
+    return pm1.reshape(*p.shape[:-1], p.shape[-1] * WORD_BITS).astype(dtype)
+
+
+# --- xnor_popcount.py oracle -------------------------------------------------
+
+def popcount_u32_ref(x: jax.Array) -> jax.Array:
+    """SWAR popcount of each uint32 (returns int32)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def xnor_gemm_ref(a_packed: jax.Array, b_packed: jax.Array,
+                  k_bits: int) -> jax.Array:
+    """Binary GEMM oracle via the XNOR-popcount identity.
+
+    a_packed: [M, W] uint32 sign-bits, b_packed: [N, W] uint32 sign-bits,
+    returns C[M, N] = dot(±1(a), ±1(b)) = 2*popcount(XNOR) - K  (int32).
+    """
+    xnor = ~(a_packed[:, None, :] ^ b_packed[None, :, :])
+    # mask tail bits beyond k_bits in the last word
+    w = a_packed.shape[-1]
+    valid = jnp.arange(w * WORD_BITS) < k_bits
+    mask = pack_signs_ref(jnp.where(valid, 1.0, -1.0))
+    pc = popcount_u32_ref(xnor & mask).sum(-1)
+    return (2 * pc - k_bits).astype(jnp.int32)
+
+
+def xnor_gemm_dense_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Same as xnor_gemm_ref but from dense float inputs: sign-binarize."""
+    sa = jnp.where(a >= 0, 1.0, -1.0).astype(jnp.float32)
+    sb = jnp.where(b >= 0, 1.0, -1.0).astype(jnp.float32)
+    return (sa @ sb.T).astype(jnp.int32)
+
+
+# --- bitserial_add.py oracle --------------------------------------------------
+
+def bitplane_add_ref(a_planes: jax.Array, b_planes: jax.Array):
+    """Ripple-carry add of bit-plane-packed integers (DRIM adder oracle).
+
+    a_planes/b_planes: [nbits, W] uint32 packed bit-planes (LSB first).
+    Returns (sum_planes [nbits, W], carry_out [W]).
+    """
+    nbits = a_planes.shape[0]
+    carry = jnp.zeros_like(a_planes[0])
+    sums = []
+    for i in range(nbits):
+        a, b = a_planes[i], b_planes[i]
+        sums.append(a ^ b ^ carry)
+        carry = (a & b) | (a & carry) | (b & carry)
+    return jnp.stack(sums), carry
+
+
+# --- flash_attention.py oracle ------------------------------------------------
+
+def sdpa_ref(q, k, v, causal: bool = True, n_rep: int = 1):
+    """Dense scaled-dot-product attention oracle (f32 math).
+
+    q [B,H,Sq,D]; k, v [B,Hkv,Sk,D]; GQA repeat via n_rep.
+    """
+    b, h, sq, d = q.shape
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=1)
+        v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

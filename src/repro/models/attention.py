@@ -1,0 +1,273 @@
+"""Attention mixers: GQA (RoPE, qk-norm, bias, windowed) and DeepSeek MLA.
+
+Three entry modes share one set of params:
+  * train/prefill : full-sequence causal attention, returns (out, cache)
+  * decode        : one new token against a KV cache of length S_ctx
+
+Caches:
+  GQA : {"k": [B, S, Hkv, Dh], "v": [B, S, Hkv, Dh]}
+  MLA : {"ckv": [B, S, kv_lora], "k_rope": [B, S, rope_dim]}  — the
+        compressed-latent cache is the MLA contribution (orders less
+        cache bytes for long_500k-class contexts).
+
+Windowed attention (zamba2 hybrid at long context) masks keys older than
+`window` — sub-quadratic memory when combined with a ring cache upstream.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (Params, apply_rope, dense, dense_init, linear,
+                     linear_init, rmsnorm, rmsnorm_init)
+
+NEG_INF = -1e30
+
+
+# =============================================================================
+# GQA
+# =============================================================================
+
+def gqa_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    bl = cfg.bitlinear in ("attn", "all")
+    p = {
+        "wq": linear_init(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dtype,
+                          bitlinear_on=bl),
+        "wk": linear_init(ks[1], d, hkv * dh, bias=cfg.qkv_bias, dtype=dtype,
+                          bitlinear_on=bl),
+        "wv": linear_init(ks[2], d, hkv * dh, bias=cfg.qkv_bias, dtype=dtype,
+                          bitlinear_on=bl),
+        "wo": linear_init(ks[3], h * dh, d, dtype=dtype, bitlinear_on=bl),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _qkv(p: Params, cfg, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = linear(p["wq"], x).reshape(b, s, h, dh)
+    k = linear(p["wk"], x).reshape(b, s, hkv, dh)
+    v = linear(p["wv"], x).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q [B,Sq,H,Dh]; k,v [B,Sk,Hkv,Dh]; mask [B?,Sq,Sk] bool (True=keep).
+
+    Mixed precision: bf16 MXU operands with f32 accumulation
+    (preferred_element_type) and f32 softmax — the TPU-native discipline.
+    Casting operands to f32 instead would halve MXU throughput and double
+    every attention tensor (and its TP collectives) on the wire.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(b, sq, hkv, n_rep, dh)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def causal_mask(sq: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sq)[None, :]
+    m = j <= i
+    if window:
+        m &= (i - j) < window
+    return m
+
+
+def _use_flash(cfg, s: int, window: int) -> bool:
+    """Pallas flash kernel applies on TPU, unwindowed, block-aligned.
+
+    On the CPU dry-run container Pallas would need interpret mode (the
+    kernel body inlined per grid point — unusable at 512 fake devices),
+    so the XLA dense-scores path stands in; the kernel itself is
+    validated by tests/test_flash_attention.py in interpret mode and its
+    HBM-traffic effect is reported as the kernel-adjusted memory term in
+    EXPERIMENTS.md §Roofline.
+    """
+    return (getattr(cfg, "attention_impl", "flash") == "flash"
+            and jax.default_backend() == "tpu"
+            and window == 0 and s % 128 == 0)
+
+
+def gqa_attend(p: Params, cfg, x: jax.Array, positions: jax.Array,
+               window: int = 0) -> Tuple[jax.Array, Dict]:
+    """Full-sequence causal attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if _use_flash(cfg, s, window):
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), True,
+            cfg.n_heads // cfg.n_kv_heads).transpose(0, 2, 1, 3)
+    else:
+        mask = causal_mask(s, window)[None]
+        out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    return linear(p["wo"], out.reshape(b, s, -1)), {"k": k, "v": v}
+
+
+def gqa_decode(p: Params, cfg, x: jax.Array, cache: Dict,
+               pos: jax.Array, window: int = 0) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x [B,1,D]; pos [B] current index into the cache."""
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(p, cfg, x, pos[:, None])
+    s_max = cache["k"].shape[1]
+    onehot = jax.nn.one_hot(pos, s_max, dtype=cache["k"].dtype)
+    k = cache["k"] + onehot[:, :, None, None] * k_new.astype(cache["k"].dtype)
+    v = cache["v"] + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
+    j = jnp.arange(s_max)[None, None, :]
+    mask = j <= pos[:, None, None]
+    if window:
+        mask &= (pos[:, None, None] - j) < window
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    return linear(p["wo"], out.reshape(b, 1, -1)), {"k": k, "v": v}
+
+
+def gqa_empty_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> Dict:
+    shp = (batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+# =============================================================================
+# MLA (DeepSeek-V3) — low-rank joint KV compression + decoupled RoPE
+# =============================================================================
+
+def mla_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d, r_q, dtype=dtype),
+        "q_a_norm": rmsnorm_init(r_q),
+        "wq_b": dense_init(ks[1], r_q, h * (dn + dr), dtype=dtype),
+        "wkv_a": dense_init(ks[2], d, r_kv + dr, dtype=dtype),
+        "kv_a_norm": rmsnorm_init(r_kv),
+        "wk_b": dense_init(ks[3], r_kv, h * dn, dtype=dtype),
+        "wv_b": dense_init(ks[4], r_kv, h * dv, dtype=dtype),
+        "wo": dense_init(ks[5], h * dv, d, dtype=dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = dense(p["wq_b"], rmsnorm(p["q_a_norm"], dense(p["wq_a"], x)))
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    """Compressed latent ckv [B,S,r_kv] + shared rope key [B,S,dr]."""
+    r_kv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = dense(p["wkv_a"], x)
+    ckv = rmsnorm(p["kv_a_norm"], kv[..., :r_kv])
+    k_rope = apply_rope(kv[..., r_kv:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_attend(p: Params, cfg, x: jax.Array, positions: jax.Array,
+               window: int = 0) -> Tuple[jax.Array, Dict]:
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    ckv, k_rope = _mla_latent(p, cfg, x, positions)
+    mask = causal_mask(s, window)[None]
+    # NOTE: q_rope is per-head but k_rope is shared across heads (MLA);
+    # fold the per-head rope scores by summing per-head q_rope against the
+    # shared k_rope inside the core.
+    out = _mla_core_multihead(p, cfg, q_nope, q_rope, ckv, k_rope, mask)
+    return dense(p["wo"], out), {"ckv": ckv, "k_rope": k_rope}
+
+
+def _mla_core_multihead(p, cfg, q_nope, q_rope, ckv, k_rope, mask):
+    b, sq = q_nope.shape[:2]
+    h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    sk = ckv.shape[1]
+    k_nope = dense(p["wk_b"], ckv).reshape(b, sk, h, dn)
+    v = dense(p["wv_b"], ckv).reshape(b, sk, h, dv)
+    scale = 1.0 / jnp.sqrt(dn + cfg.qk_rope_dim).astype(jnp.float32)
+    # bf16 MXU operands, f32 accumulation (see _sdpa note)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h * dv).astype(ckv.dtype)
+
+
+def mla_decode(p: Params, cfg, x: jax.Array, cache: Dict,
+               pos: jax.Array, window: int = 0) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[:, None])
+    ckv_new, k_rope_new = _mla_latent(p, cfg, x, pos[:, None])
+    s_max = cache["ckv"].shape[1]
+    onehot = jax.nn.one_hot(pos, s_max, dtype=cache["ckv"].dtype)
+    ckv = cache["ckv"] + onehot[:, :, None] * ckv_new.astype(cache["ckv"].dtype)
+    k_rope = cache["k_rope"] + onehot[:, :, None] * k_rope_new.astype(
+        cache["k_rope"].dtype)
+    j = jnp.arange(s_max)[None, None, :]
+    mask = j <= pos[:, None, None]
+    if window:
+        mask &= (pos[:, None, None] - j) < window
+    out = _mla_core_multihead(p, cfg, q_nope, q_rope, ckv, k_rope, mask)
+    return dense(p["wo"], out), {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_empty_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> Dict:
+    return {"ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype)}
+
+
+# =============================================================================
+# Cross-attention (whisper decoder)
+# =============================================================================
+
+def cross_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, h * dh, dtype=dtype),
+            "wk": dense_init(ks[1], d, h * dh, dtype=dtype),
+            "wv": dense_init(ks[2], d, h * dh, dtype=dtype),
+            "wo": dense_init(ks[3], h * dh, d, dtype=dtype)}
+
+
+def cross_kv(p: Params, cfg, enc: jax.Array):
+    b, se, _ = enc.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    k = dense(p["wk"], enc).reshape(b, se, h, dh)
+    v = dense(p["wv"], enc).reshape(b, se, h, dh)
+    return {"k": k, "v": v}
+
+
+def cross_attend(p: Params, cfg, x: jax.Array, kv: Dict) -> jax.Array:
+    b, sq, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = dense(p["wq"], x).reshape(b, sq, h, dh)
+    mask = jnp.ones((1, sq, kv["k"].shape[1]), bool)
+    out = _sdpa(q, kv["k"], kv["v"], mask, 1)
+    return dense(p["wo"], out.reshape(b, sq, -1))

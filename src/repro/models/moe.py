@@ -1,0 +1,314 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch (EP-friendly).
+
+Static-shape dropless-ish routing in the Megablocks/MaxText style:
+
+  1. router logits [T, E] -> top-k (weights softmaxed over the selected k)
+  2. flatten (token, expert) assignments, sort by expert id
+  3. rank-in-expert = position - expert start (from a bincount cumsum)
+  4. assignments with rank >= capacity are DROPPED (capacity_factor slack)
+  5. scatter tokens into [E, C, D] buffers, run the expert MLPs as one
+     batched einsum (experts shard over the `model` mesh axis = EP), and
+     combine back with the routing weights.
+
+Two dispatch strategies (cfg.moe_dispatch):
+
+  * "grouped" (default, GShard-style) — tokens are grouped per batch row;
+    the sort/scatter runs *within* each group (vmap over B) so all the
+    data-dependent index ops stay local to the DP shard.  The dispatched
+    [G, E, C, D] buffer is sharding-constrained to (dp, model) — tokens
+    move to their expert's shard via ALL-TO-ALL over `model`, the expert
+    einsums run fully local, and the combine returns via the inverse
+    all-to-all.  Wire cost per layer ~= 2 x local dispatch slab.
+
+  * "global" — single sort over all B*S tokens.  Baseline: data-dependent
+    scatter across the whole (sharded) batch forces GSPMD to replicate
+    token buffers and ALL-REDUCE [E*C, D] partials per layer (measured
+    ~120 TB/device/step for kimi-k2 train_4k — the §Perf baseline).
+    Kept selectable for the perf A/B and used automatically for S == 1
+    (decode: T = B tokens, dispatch is KB-sized; grouping would inflate
+    the capacity floor E*8 slots per token).
+
+All shapes are static — required for pjit/AOT lowering.  Aux losses:
+load-balance (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, ambient_mesh, constrain, dense, dense_init, \
+    linear_init, linear
+
+
+def moe_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    bl = cfg.bitlinear in ("ffn", "all")
+
+    def expert_bank(k, d_in, d_out):
+        return (jax.random.normal(k, (e, d_in, d_out))
+                / jnp.sqrt(d_in)).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),
+        "gate": expert_bank(ks[1], d, f),
+        "up": expert_bank(ks[2], d, f),
+        "down": expert_bank(ks[3], f, d),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        p["shared"] = {
+            "gate": linear_init(ks[4], d, fs, dtype=dtype, bitlinear_on=bl),
+            "up": linear_init(ks[5], d, fs, dtype=dtype, bitlinear_on=bl),
+            "down": linear_init(jax.random.fold_in(ks[4], 1), fs, d,
+                                dtype=dtype, bitlinear_on=bl),
+        }
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor of 8
+
+
+def _topk_local(probs: jax.Array, k: int):
+    """top-k via k iterated argmax.
+
+    jax.lax.top_k lowers to a sort/TopK custom-call whose SPMD rule
+    gathers the full [B, S, E] router tensor (measured 2.2 GB/layer on
+    deepseek-v3); k passes of argmax + mask are elementwise/reduction
+    ops GSPMD keeps shard-local.  Tie-breaking (first index) and the
+    selected-entry gradient flow match lax.top_k exactly.
+    """
+    e = probs.shape[-1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, probs.ndim - 1)
+    ws, idxs = [], []
+    pcur = probs
+    for _ in range(k):
+        i = jnp.argmax(pcur, axis=-1)
+        w = jnp.take_along_axis(pcur, i[..., None], axis=-1)[..., 0]
+        ws.append(w)
+        idxs.append(i)
+        pcur = jnp.where(cols == i[..., None], -jnp.inf, pcur)
+    return jnp.stack(ws, -1), jnp.stack(idxs, -1)
+
+
+def _route(p, cfg, x):
+    """x [..., D] -> (top_w, top_e [..., k], aux).
+
+    Operates on the UN-flattened [B, S, D] activations: flattening B*S
+    merges a dp-sharded dim with a model-sharded one (under SP), a
+    product sharding GSPMD cannot represent — it all-gathers the full
+    [T, E] router tensors (measured 3.2 GB/layer on kimi-k2).  Keeping
+    the dims separate makes top_k / softmax fully shard-local.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    t = x[..., 0].size
+    # bf16 matmul, f32 softmax/top-k (router kernel stays f32 in params;
+    # dense() casts it to the activation dtype for the MXU)
+    logits = dense(p["router"], x).astype(jnp.float32)          # [..., E]
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_e = _topk_local(probs, k)                        # [..., k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # aux: Switch load-balance + z-loss.  The expert-count scatter only
+    # moves int32 indices (the [E] output is replicated) — cheap.
+    red = tuple(range(logits.ndim - 1))
+    me = probs.mean(red)                                        # [E]
+    ce = jnp.zeros((e,)).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux_lb = e * jnp.sum(me * ce)
+    aux_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, -1)))
+    return top_w, top_e, {"load_balance": aux_lb, "router_z": aux_z}
+
+
+def _sort_dispatch(cfg, xt, top_e, top_w, cap: int):
+    """Sort/scatter T tokens into [E, cap, D] buffers (static shapes).
+
+    Returns (expert_in, combine_ctx).  Pure index math — vmappable, so
+    the grouped path can run it per batch row with everything local.
+    """
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_e = top_e.reshape(-1)                                  # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)                       # token ids
+    flat_w = top_w.reshape(-1)
+
+    order = jnp.argsort(flat_e)                                 # stable
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)            # drop bucket
+
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buf = buf.at[slot].add(xt[st_])                             # scatter
+    return buf[:-1].reshape(e, cap, d), (slot, st_, sw, keep)
+
+
+def _combine(cfg, expert_out, ctx, t: int):
+    """Inverse of _sort_dispatch: [E, cap, D] -> [T, D]."""
+    slot, st_, sw, keep = ctx
+    e_cap, d = expert_out.shape[0] * expert_out.shape[1], expert_out.shape[2]
+    flat_out = expert_out.reshape(e_cap, d)
+    gathered = jnp.where(keep[:, None],
+                         flat_out[jnp.minimum(slot, e_cap - 1)], 0.0)
+    return jnp.zeros((t, d), expert_out.dtype).at[st_].add(
+        gathered * sw[:, None].astype(expert_out.dtype))
+
+
+def _expert_mlps(p, x_dtype, expert_in):
+    """[..., E, C, D] -> [..., E, C, D] through the E expert SwiGLUs."""
+    g = jnp.einsum("...ecd,edf->...ecf", expert_in,
+                   p["gate"].astype(x_dtype))
+    u = jnp.einsum("...ecd,edf->...ecf", expert_in, p["up"].astype(x_dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...ecf,efd->...ecd", h, p["down"].astype(x_dtype))
+
+
+def _ep_shard_map(p, cfg, x, top_e, top_w, mesh):
+    """Explicit expert-parallel block under shard_map.
+
+    Every model shard holds E_loc = E / |model| experts.  The residual
+    stream is replicated over `model` (dp-sharded on batch), so each
+    shard builds ONLY its own [B_loc, E_loc, C, D] dispatch slab locally
+    (sort + masked scatter — no communication), runs its expert SwiGLUs,
+    scatters back a partial [B_loc, S, D] (tokens routed elsewhere
+    contribute zero), and a single psum over `model` sums the top-k
+    partial outputs.  Per-layer wire = 2 x |activations| (fwd psum + bwd
+    broadcast-psum) instead of all-gathering the full expert buffers —
+    the contraction structure GSPMD cannot infer from a gather-combine.
+    """
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+    n_model = mesh.shape["model"]
+    e_loc = e // n_model
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # Sequence-sharded entry: the body all-gathers x over `model` in bf16
+    # EXPLICITLY, so autodiff transposes it to a bf16 psum_scatter — with
+    # a replicated-x in_spec, the cotangent instead becomes an implicit
+    # f32 psum of [B, S*k, D]-granular gather gradients (measured
+    # ~19 GB/layer on kimi-k2).
+    seq_shard_in = getattr(cfg, "seq_parallel", True) and s % n_model == 0
+
+    def body(x_l, te_l, tw_l, g_l, u_l, dn_l):
+        lo = jax.lax.axis_index("model") * e_loc
+        if seq_shard_in:
+            x_l = jax.lax.all_gather(x_l, "model", axis=1, tiled=True)
+            te_l = jax.lax.all_gather(te_l, "model", axis=1, tiled=True)
+            tw_l = jax.lax.all_gather(tw_l, "model", axis=1, tiled=True)
+
+        def dispatch_one(xt, te_g, tw_g):
+            flat_e = te_g.reshape(-1)                       # [S*k]
+            flat_t = jnp.repeat(jnp.arange(s), k)
+            flat_w = tw_g.reshape(-1)
+            order = jnp.argsort(flat_e)
+            se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+            counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+            starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                      jnp.cumsum(counts)[:-1]])
+            rank = jnp.arange(s * k) - starts[se]
+            keep = (rank < cap) & (se >= lo) & (se < lo + e_loc)
+            slot = jnp.where(keep, (se - lo) * cap + rank, e_loc * cap)
+            buf = jnp.zeros((e_loc * cap + 1, d), xt.dtype)
+            buf = buf.at[slot].add(xt[st_])
+            return buf[:-1].reshape(e_loc, cap, d), (slot, st_, sw, keep)
+
+        expert_in, ctx = jax.vmap(dispatch_one)(x_l, te_l, tw_l)
+        g = jnp.einsum("becd,edf->becf", expert_in, g_l.astype(x_l.dtype))
+        u = jnp.einsum("becd,edf->becf", expert_in, u_l.astype(x_l.dtype))
+        out = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                         dn_l.astype(x_l.dtype))
+
+        def combine_one(eo, c):
+            slot, st_, sw, keep = c
+            flat = eo.reshape(e_loc * cap, d)
+            gathered = jnp.where(keep[:, None],
+                                 flat[jnp.minimum(slot, e_loc * cap - 1)],
+                                 0.0)
+            return jnp.zeros((s, d), eo.dtype).at[st_].add(
+                gathered * sw[:, None].astype(eo.dtype))
+
+        y_partial = jax.vmap(combine_one)(out, ctx)         # [B_loc, S, D]
+        if scatter_seq:
+            # sequence-parallel exit: reduce-scatter along S — half the
+            # wire of the psum, and the caller keeps the S-sharded
+            # residual layout (no re-slice).
+            return jax.lax.psum_scatter(y_partial, "model",
+                                        scatter_dimension=1, tiled=True)
+        return jax.lax.psum(y_partial, "model")
+
+    scatter_seq = seq_shard_in
+    dp_spec = P(dp if dp else None)
+    sp_spec = P(dp if dp else None, "model")
+    in_x_spec = sp_spec if seq_shard_in else dp_spec
+    out_spec = sp_spec if scatter_seq else dp_spec
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(in_x_spec, in_x_spec, in_x_spec,
+                  P("model"), P("model"), P("model")),
+        out_specs=out_spec,
+    )(x, top_e.reshape(b, s, k), top_w.reshape(b, s, k),
+      p["gate"], p["up"], p["down"])
+
+
+def _ep_applicable(cfg, mesh, b: int, s: int) -> bool:
+    if mesh is None or s <= 1 or "model" not in mesh.axis_names:
+        return False
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    return (cfg.n_experts % mesh.shape["model"] == 0) and (b % n_dp == 0)
+
+
+def moe_ffn(p: Params, cfg, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x [B, S, D] -> (y [B, S, D], aux losses)."""
+    b, s, d = x.shape
+    mode = getattr(cfg, "moe_dispatch", "ep")
+    mesh = ambient_mesh() if mode == "ep" else None
+    if mode == "ep" and not _ep_applicable(cfg, mesh, b, s):
+        mode, mesh = "grouped", None
+    grouped = mode == "grouped" and s > 1
+
+    # NB: no b*s flattening anywhere — merging a dp-sharded B with a
+    # (SP) model-sharded S produces a product sharding GSPMD cannot
+    # express, and it falls back to full gathers.
+    if mode == "ep":
+        top_w, top_e, aux = _route(p, cfg, x)               # [B, S, k]
+        y = _ep_shard_map(p, cfg, x, top_e, top_w, mesh)
+    elif grouped:
+        # --- GShard-style: route + sort per batch row (DP-shard local) ---
+        top_w, top_e, aux = _route(p, cfg, x)
+        cap = _capacity(s, cfg)
+        expert_in, ctx = jax.vmap(
+            lambda xt, te, tw: _sort_dispatch(cfg, xt, te, tw, cap)
+        )(x, top_e, top_w)
+        # tokens -> expert shards (ALL-TO-ALL over `model`); groups stay DP
+        expert_in = constrain(expert_in, "dp", "model")     # [B, E, C, D]
+        expert_out = _expert_mlps(p, x.dtype, expert_in)
+        expert_out = constrain(expert_out, "dp", "model")
+        # expert shards -> token shards (inverse all-to-all)
+        expert_out = constrain(expert_out, "dp", None)
+        y = jax.vmap(lambda eo, c: _combine(cfg, eo, c, s))(expert_out, ctx)
+    else:
+        # --- global single-sort baseline (and the S == 1 decode path) ---
+        t = b * s
+        xt = x.reshape(t, d)
+        top_w, top_e, aux = _route(p, cfg, xt)
+        cap = _capacity(t, cfg)
+        expert_in, ctx = _sort_dispatch(cfg, xt, top_e, top_w, cap)
+        expert_out = _expert_mlps(p, x.dtype, expert_in)
+        y = _combine(cfg, expert_out, ctx, t).reshape(b, s, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + linear(sh["down"],
+                       jax.nn.silu(linear(sh["gate"], x))
+                       * linear(sh["up"], x))
+
+    return y, aux

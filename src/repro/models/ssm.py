@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked-scan formulation.
+
+Faithful to the SSD algorithm of arXiv:2405.21060: the sequence is split
+into chunks; within a chunk the dual (attention-like) quadratic form is
+used, across chunks a linear state recurrence carries [H, P, N] states.
+This yields O(S·chunk) work — sub-quadratic — and a constant-size decode
+state, which is why the mamba2/zamba2 archs run the `long_500k` shape.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim (P = head_dim),
+N = ssm_state, groups g=1 (B/C shared across heads).
+
+The selective-scan recurrence is continuous-valued — the paper's bit-wise
+DRA technique does not apply here (DESIGN.md §Arch-applicability);
+BitLinear remains available on in/out projections.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+CHUNK = 256
+
+
+def ssm_init(key, cfg, *, dtype=jnp.float32) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    kc = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * n  # x + B + C go through the causal conv
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (kc, conv_dim)) /
+                   jnp.sqrt(kc)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(ks[2], di, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along S: xbc [B,S,C], w [K,C].
+
+    Expressed as conv_general_dilated so SPMD can spatially partition it
+    with a (K-1)-frame halo exchange when S is sequence-sharded; the
+    shifted-slice formulation reshards the whole tensor per tap.
+    """
+    k, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        xbc, w[:, None, :],                      # rhs [K, I=1, O=C]
+        window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip):
+    """SSD chunked scan.
+
+    x [B,S,H,P]; dt [B,S,H] (post-softplus); a_log [H];
+    b_mat, c_mat [B,S,N]  (g=1, shared across heads).
+    Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    a = -jnp.exp(a_log)                                     # [H], negative
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]                        # [B,nc,L,H] logs
+    da_cum = jnp.cumsum(da, axis=2)
+
+    # Mixed precision: decay/log tensors stay f32 (exp stability); the
+    # heavy batched einsums take bf16 MXU operands with f32 accumulation.
+    bf = jnp.bfloat16
+    xc16, bc16, cc16 = xc.astype(bf), bc.astype(bf), cc.astype(bf)
+
+    # intra-chunk (dual quadratic form, causal within the chunk).
+    # Mask in LOG space: for j > i the exponent is positive and would
+    # overflow to inf before a post-hoc mask could zero it (inf*0 = nan).
+    li = da_cum[:, :, :, None, :]                            # target i
+    lj = da_cum[:, :, None, :, :]                            # source j
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, li - lj, -jnp.inf))    # [B,nc,Li,Lj,H]
+    cb = jnp.einsum("bcin,bcjn->bcij", cc16, bc16,
+                    preferred_element_type=jnp.float32)      # [B,nc,L,L]
+    w = (cb[..., None] * decay * dtc[:, :, None, :, :]).astype(bf)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc16,
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_j B_j (x_j dt_j) decay(j->end)
+    decay_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)       # [B,nc,L,H]
+    xw = (xc * (dtc * decay_end)[..., None]).astype(bf)      # [B,nc,L,H,P]
+    s_chunk = jnp.einsum("bcjn,bcjhp->bchpn", bc16, xw,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk linear recurrence via a triangular decay matrix.  No
+    # sequential lax.scan: prev_state entering chunk c is
+    #     sum_{j<c} exp(L[c-1] - L[j]) * S_j,   L = inclusive cumsum of
+    # per-chunk log-decay segments — an [nc, nc] masked einsum that (a)
+    # XLA can count/schedule (no while body), (b) stays local when nc is
+    # sequence-sharded (partial sums over j), (c) has no sequential
+    # chain of nc collective hops.
+    seg = da_cum[:, :, -1, :]                                # [B,nc,H]
+    lcum = jnp.cumsum(seg, axis=1)
+    lc = lcum[:, :, None, :] - seg[:, :, None, :]            # L[c-1]
+    lj = lcum[:, None, :, :]                                 # L[j]
+    tri = (jnp.arange(nc)[:, None] > jnp.arange(nc)[None, :])[None, :, :,
+                                                              None]
+    t_mat = jnp.exp(jnp.where(tri, lc - lj, -jnp.inf))       # [B,c,j,H]
+    prev_states = jnp.einsum("bcjh,bjhpn->bchpn", t_mat, s_chunk)
+    t_fin = jnp.exp(lcum[:, -1:, :] - lcum)                  # [B,nc,H]
+    final = jnp.einsum("bjh,bjhpn->bhpn", t_fin, s_chunk)
+
+    # inter-chunk contribution: y_i += C_i · prev_state * decay(start->i)
+    state_decay = jnp.exp(da_cum)                            # [B,nc,L,H]
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cc16,
+                         prev_states.astype(bf),
+                         preferred_element_type=jnp.float32) \
+        * state_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p) \
+        + x * d_skip[None, None, :, None]
+    return y, final
+
+
+def ssm_mix(p: Params, cfg, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Full-sequence Mamba2 mixer (train / prefill).  x [B,S,D]."""
+    bsz, s, _ = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_raw, dt = _split_proj(cfg, dense(p["in_proj"], x))
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xin = xbc[..., :di].reshape(bsz, s, h, hd)
+    b_mat = xbc[..., di:di + n]
+    c_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    y, state = _ssd_chunked(xin.astype(jnp.float32), dt, p["a_log"],
+                            b_mat.astype(jnp.float32),
+                            c_mat.astype(jnp.float32), p["d_skip"])
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    cache = {"state": state.astype(jnp.float32),
+             "conv": xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(jnp.float32)}
+    return dense(p["out_proj"], y), cache
+
+
+def ssm_empty_cache(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * n
+    return {"state": jnp.zeros((batch, h, hd, n), dtype),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)}
+
+
+def ssm_decode(p: Params, cfg, x: jax.Array, cache: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent step.  x [B,1,D]; O(1) state update."""
+    bsz = x.shape[0]
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_new, dt = _split_proj(cfg, dense(p["in_proj"], x))
+
+    # rolling conv state: [B, K-1, C] + current input
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), xbc_new], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = (hist * w[None, :, :]).sum(1, keepdims=True) \
+        + p["conv_b"].astype(x.dtype)[None, None, :]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+
+    xin = xbc[..., :di].reshape(bsz, h, hd)
+    b_mat = xbc[:, 0, di:di + n]
+    c_mat = xbc[:, 0, di + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None, :])             # [B,H]
+    a = -jnp.exp(p["a_log"])                                  # [H]
+    da = jnp.exp(dt * a[None, :])                             # [B,H]
+
+    state = cache["state"]                                    # [B,H,P,N]
+    upd = jnp.einsum("bn,bhp->bhpn", b_mat.astype(jnp.float32),
+                     xin.astype(jnp.float32) * dt[..., None])
+    state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_mat.astype(jnp.float32), state) \
+        + xin.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y), {"state": state, "conv": new_conv}

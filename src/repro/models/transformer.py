@@ -1,0 +1,372 @@
+"""Model trunk: scan-over-layers LM covering all assigned families.
+
+Public interface (all pure functions of (params, cfg, ...)):
+
+  init_params(key, cfg)                      -> params
+  train_loss(params, cfg, batch)             -> (loss, metrics)
+  prefill(params, cfg, batch)                -> (logits_last, caches)
+  decode_step(params, cfg, tokens, caches, pos, ctx_len) -> (logits, caches)
+  empty_caches(cfg, batch, s_max)            -> caches
+
+Layers are stacked ([L, ...] params) and driven by jax.lax.scan so the
+HLO stays one-layer-sized regardless of depth (80-layer qwen2-72b lowers
+in seconds).  Remat (jax.checkpoint with dots-saveable policy) wraps the
+scan body for training.
+
+Family assembly:
+  dense | vlm       : N x dense_block (+ patch-embed stub prefix for vlm)
+  moe               : N x moe_block (GQA or MLA attention)
+  ssm               : N x ssm_block (Mamba2 SSD)
+  hybrid (zamba2)   : G groups of [attn_every x ssm_block] + shared
+                      dense_block applied after each group (weights
+                      SHARED across sites, caches per site) + tail blocks
+  audio (whisper)   : encoder (bidirectional dense blocks over stub frame
+                      embeddings) + decoder (self + cross blocks)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import blocks as B
+from .layers import Params, rmsnorm, rmsnorm_init
+
+LB_COEF, Z_COEF = 0.01, 1e-3
+LONG_CTX_THRESHOLD = 131072
+
+
+# --- helpers ----------------------------------------------------------------
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def padded_vocab(cfg) -> int:
+    """Megatron-style vocab padding: embedding/head vocab dim rounded to
+    a multiple of cfg.vocab_pad_multiple so vocab-parallel sharding never
+    falls back to a row-parallel head (whisper's 51865 otherwise costs a
+    full [B,S,V] f32 all-reduce).  Logical vocab stays cfg.vocab_size;
+    pad logits are masked to -inf in _logits."""
+    m = getattr(cfg, "vocab_pad_multiple", 1) or 1
+    return -(-cfg.vocab_size // m) * m
+
+
+def _embed_init(key, cfg, dtype):
+    v, d = padded_vocab(cfg), cfg.d_model
+    return (jax.random.normal(key, (v, d)) * 0.01).astype(dtype)
+
+
+def _window_for(cfg, ctx_len: int) -> int:
+    if cfg.family == "hybrid" and ctx_len >= LONG_CTX_THRESHOLD:
+        return cfg.long_context_window
+    return 0
+
+
+def _block_fns(cfg):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return B.dense_block_init, B.dense_block, B.dense_block_decode
+    if fam == "moe":
+        return B.moe_block_init, B.moe_block, B.moe_block_decode
+    if fam == "ssm":
+        return B.ssm_block_init, B.ssm_block, B.ssm_block_decode
+    raise ValueError(fam)
+
+
+def _hybrid_layout(cfg) -> Tuple[int, int, int]:
+    """(n_groups, per_group, tail) for the zamba2 layout."""
+    per = cfg.attn_every
+    groups = cfg.n_layers // per
+    tail = cfg.n_layers - groups * per
+    return groups, per, tail
+
+
+# --- init --------------------------------------------------------------------
+
+def init_params(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": _embed_init(keys[0], cfg, dtype),
+                 "final_norm": rmsnorm_init(cfg.d_model),
+                 "head": (jax.random.normal(keys[1],
+                                            (cfg.d_model,
+                                             padded_vocab(cfg)))
+                          * 0.01).astype(dtype)}
+    if cfg.family == "audio":
+        p["enc_layers"] = _stack_init(
+            lambda k: B.dense_block_init(k, cfg, dtype=dtype), keys[2],
+            cfg.encoder_layers)
+        p["enc_norm"] = rmsnorm_init(cfg.d_model)
+        p["layers"] = _stack_init(
+            lambda k: B.xdec_block_init(k, cfg, dtype=dtype), keys[3],
+            cfg.n_layers)
+    elif cfg.family == "hybrid":
+        groups, per, tail = _hybrid_layout(cfg)
+        flat = _stack_init(lambda k: B.ssm_block_init(k, cfg, dtype=dtype),
+                           keys[2], groups * per)
+        p["mamba_groups"] = jax.tree.map(
+            lambda x: x.reshape(groups, per, *x.shape[1:]), flat)
+        if tail:
+            p["mamba_tail"] = _stack_init(
+                lambda k: B.ssm_block_init(k, cfg, dtype=dtype), keys[3],
+                tail)
+        p["shared"] = B.dense_block_init(keys[4], cfg, dtype=dtype)
+    else:
+        init_fn, _, _ = _block_fns(cfg)
+        p["layers"] = _stack_init(lambda k: init_fn(k, cfg, dtype=dtype),
+                                  keys[2], cfg.n_layers)
+    return p
+
+
+# --- embedding / head --------------------------------------------------------
+
+def _embed(p, cfg, tokens, batch):
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        np_ = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, np_:, :]], axis=1)
+    return x
+
+
+def _logits(p, cfg, x):
+    x = rmsnorm(p["final_norm"], x)
+    logits = (x @ p["head"].astype(x.dtype)).astype(jnp.float32)
+    v_pad = p["head"].shape[-1]
+    if v_pad != cfg.vocab_size:  # mask pad columns (elementwise, no comm)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+# --- full-sequence forward (train / prefill) ----------------------------------
+
+def _scan_layers(p_layers, cfg, block_fn, x, positions, window, *,
+                 with_cache: bool, extra=None):
+    aux0 = dict(B.ZERO_AUX)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        if extra is None:
+            h, cache, aux_l = block_fn(layer_p, cfg, h, positions,
+                                       window=window)
+        else:
+            h, cache, aux_l = block_fn(layer_p, cfg, h, positions, extra,
+                                       window=window)
+        aux = jax.tree.map(jnp.add, aux, aux_l)
+        return (h, aux), (cache if with_cache else 0)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (x, aux), caches = jax.lax.scan(body, (x, aux0), p_layers,
+                                    unroll=cfg.scan_unroll)
+    return x, aux, (caches if with_cache else None)
+
+
+def _forward_full(p, cfg, batch, *, with_cache: bool):
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (bsz, s))
+    window = _window_for(cfg, s)
+    x = _embed(p, cfg, tokens, batch)
+
+    if cfg.family == "audio":
+        enc = batch["frames"].astype(cfg.activation_dtype)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None, :],
+                                   (bsz, enc.shape[1]))
+
+        def enc_body(h, layer_p):
+            h, _, _ = B.dense_block(layer_p, cfg, h, enc_pos, causal=False)
+            return h, 0
+        if cfg.remat:
+            enc_body = jax.checkpoint(enc_body)
+        enc, _ = jax.lax.scan(enc_body, enc, p["enc_layers"],
+                              unroll=cfg.scan_unroll)
+        enc = rmsnorm(p["enc_norm"], enc)
+        x, aux, caches = _scan_layers(p["layers"], cfg, B.xdec_block, x,
+                                      positions, window,
+                                      with_cache=with_cache, extra=enc)
+        return x, aux, caches
+
+    if cfg.family == "hybrid":
+        return _hybrid_full(p, cfg, x, positions, window,
+                            with_cache=with_cache)
+
+    _, block_fn, _ = _block_fns(cfg)
+    x, aux, caches = _scan_layers(p["layers"], cfg, block_fn, x, positions,
+                                  window, with_cache=with_cache)
+    return x, aux, caches
+
+
+def _hybrid_full(p, cfg, x, positions, window, *, with_cache: bool):
+    groups, per, tail = _hybrid_layout(cfg)
+
+    def group_body(carry, group_p):
+        h = carry
+
+        def inner(h2, layer_p):
+            h2, cache, _ = B.ssm_block(layer_p, cfg, h2)
+            return h2, (cache if with_cache else 0)
+        h, m_caches = jax.lax.scan(inner, h, group_p,
+                                    unroll=cfg.scan_unroll)
+        h, a_cache, _ = B.dense_block(p["shared"], cfg, h, positions,
+                                      window=window)
+        return h, ((m_caches, a_cache) if with_cache else 0)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, g_caches = jax.lax.scan(group_body, x, p["mamba_groups"],
+                               unroll=cfg.scan_unroll)
+
+    t_caches = None
+    if tail:
+        def inner_t(h2, layer_p):
+            h2, cache, _ = B.ssm_block(layer_p, cfg, h2)
+            return h2, (cache if with_cache else 0)
+        x, t_caches = jax.lax.scan(inner_t, x, p["mamba_tail"],
+                                   unroll=cfg.scan_unroll)
+
+    caches = None
+    if with_cache:
+        caches = {"groups": g_caches[0], "shared": g_caches[1],
+                  "tail": t_caches}
+    return x, dict(B.ZERO_AUX), caches
+
+
+# --- train loss ----------------------------------------------------------------
+
+def train_loss(params, cfg, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+    x, aux, _ = _forward_full(params, cfg, batch, with_cache=False)
+    logits = _logits(params, cfg, x)                       # [B,S,V] f32
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + LB_COEF * aux["load_balance"] + Z_COEF * aux["router_z"]
+    return loss, {"ce": ce, "aux_lb": aux["load_balance"],
+                  "aux_z": aux["router_z"], "ntokens": mask.sum()}
+
+
+# --- prefill -------------------------------------------------------------------
+
+def prefill(params, cfg, batch) -> Tuple[jax.Array, Any]:
+    x, _, caches = _forward_full(params, cfg, batch, with_cache=True)
+    return _logits(params, cfg, x[:, -1:, :]), caches
+
+
+# --- decode --------------------------------------------------------------------
+
+def decode_step(params, cfg, tokens, caches, pos, ctx_len: int
+                ) -> Tuple[jax.Array, Any]:
+    """tokens [B,1]; pos [B] write index; ctx_len static cache length."""
+    window = _window_for(cfg, ctx_len)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        cfg.activation_dtype)
+
+    if cfg.family == "audio":
+        def body(h, xs):
+            layer_p, cache = xs
+            h, new_cache = B.xdec_block_decode(layer_p, cfg, h, cache, pos,
+                                               window=window)
+            return h, new_cache
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                     unroll=cfg.scan_unroll)
+        return _logits(params, cfg, x), new_caches
+
+    if cfg.family == "hybrid":
+        return _hybrid_decode(params, cfg, x, caches, pos, window)
+
+    _, _, decode_fn = _block_fns(cfg)
+
+    def body(h, xs):
+        layer_p, cache = xs
+        h, new_cache = decode_fn(layer_p, cfg, h, cache, pos, window=window)
+        return h, new_cache
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                 unroll=cfg.scan_unroll)
+    return _logits(params, cfg, x), new_caches
+
+
+def _hybrid_decode(params, cfg, x, caches, pos, window):
+    groups, per, tail = _hybrid_layout(cfg)
+
+    def group_body(h, xs):
+        group_p, (m_caches, a_cache) = xs
+
+        def inner(h2, ys):
+            layer_p, cache = ys
+            h2, new_cache = B.ssm_block_decode(layer_p, cfg, h2, cache)
+            return h2, new_cache
+        h, new_m = jax.lax.scan(inner, h, (group_p, m_caches),
+                                unroll=cfg.scan_unroll)
+        h, new_a = B.dense_block_decode(params["shared"], cfg, h, a_cache,
+                                        pos, window=window)
+        return h, (new_m, new_a)
+
+    x, (new_groups, new_shared) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"],
+                        (caches["groups"], caches["shared"])),
+        unroll=cfg.scan_unroll)
+
+    new_tail = None
+    if tail:
+        def inner_t(h2, ys):
+            layer_p, cache = ys
+            h2, new_cache = B.ssm_block_decode(layer_p, cfg, h2, cache)
+            return h2, new_cache
+        x, new_tail = jax.lax.scan(inner_t, x,
+                                   (params["mamba_tail"], caches["tail"]),
+                                   unroll=cfg.scan_unroll)
+
+    logits = _logits(params, cfg, x)
+    return logits, {"groups": new_groups, "shared": new_shared,
+                    "tail": new_tail}
+
+
+# --- cache constructors ---------------------------------------------------------
+
+def empty_caches(cfg, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """Cache pytree for decode shapes (prefill produces the same shapes)."""
+    L = cfg.n_layers
+
+    def stack(n, c):
+        return jax.tree.map(lambda x: jnp.broadcast_to(
+            x[None], (n, *x.shape)), c)
+
+    if cfg.family in ("dense", "vlm"):
+        return stack(L, attn_mod.gqa_empty_cache(cfg, batch, s_max, dtype))
+    if cfg.family == "moe":
+        c = (attn_mod.mla_empty_cache(cfg, batch, s_max, dtype) if cfg.mla
+             else attn_mod.gqa_empty_cache(cfg, batch, s_max, dtype))
+        return stack(L, c)
+    if cfg.family == "ssm":
+        from . import ssm as ssm_mod
+        return stack(L, ssm_mod.ssm_empty_cache(cfg, batch))
+    if cfg.family == "hybrid":
+        from . import ssm as ssm_mod
+        groups, per, tail = _hybrid_layout(cfg)
+        m = ssm_mod.ssm_empty_cache(cfg, batch)
+        out = {"groups": stack(groups, stack(per, m)),
+               "shared": stack(groups,
+                               attn_mod.gqa_empty_cache(cfg, batch, s_max,
+                                                        dtype)),
+               "tail": stack(tail, m) if tail else None}
+        return out
+    if cfg.family == "audio":
+        self_c = attn_mod.gqa_empty_cache(cfg, batch, s_max, dtype)
+        cross_c = {"k": jnp.zeros((batch, cfg.n_frames, cfg.n_heads,
+                                   cfg.d_head), dtype),
+                   "v": jnp.zeros((batch, cfg.n_frames, cfg.n_heads,
+                                   cfg.d_head), dtype)}
+        return stack(L, {"self": self_c, "cross": cross_c})
+    raise ValueError(cfg.family)

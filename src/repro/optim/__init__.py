@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, adamw, adafactor, adam8bit,
+                         get_optimizer, clip_by_global_norm)
+from .compress import (compress_grad, decompress_grad, compress_tree,
+                       decompress_tree, init_errors, compressed_allreduce)
+from .schedule import warmup_cosine, constant

@@ -1,0 +1,78 @@
+"""1-bit (sign) gradient compression with error feedback — the paper's bulk
+X(N)OR primitive applied to the distributed-optimization layer.
+
+signSGD-with-EF (1-bit Adam family): each data-parallel worker transmits
+only the SIGN BITS of its gradient (bit-packed uint32 — exactly the bulk
+bit-wise payload DRIM accelerates) plus one fp32 scale per tensor; the
+quantization residual is fed back into the next step.  All-reduce bytes
+drop 32x on the compressed tensors.
+
+In-graph formulation (pjit-friendly): compression happens *inside* the
+train step on the data-sharded gradient average.  We model the comm
+payload with the packed representation so the dry-run HLO carries the
+32x-smaller collectives (see EXPERIMENTS.md §Perf hillclimb on the
+collective term).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grad(g: jax.Array, err: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (sign ±1 int8, scale, new_error).  scale = mean|g_corrected|."""
+    gc = g.astype(jnp.float32) + err
+    scale = jnp.mean(jnp.abs(gc))
+    sign = jnp.where(gc >= 0, jnp.int8(1), jnp.int8(-1))
+    decoded = sign.astype(jnp.float32) * scale
+    return sign, scale, gc - decoded
+
+
+def decompress_grad(sign: jax.Array, scale: jax.Array) -> jax.Array:
+    return sign.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, errors):
+    """Tree version; returns (signs, scales, new_errors)."""
+    signs, scales, errs = {}, {}, {}
+    flat, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [compress_grad(g, e) for g, e in zip(flat, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]),
+            tdef.unflatten([o[2] for o in out]))
+
+
+def decompress_tree(signs, scales):
+    return jax.tree.map(decompress_grad, signs, scales)
+
+
+def init_errors(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_allreduce(grads, errors, axis_names):
+    """EF-compressed data-parallel mean, for use under shard_map.
+
+    Encodes sign+scale and psums the ±1 payload across `axis_names` as
+    INT8 — float sign payloads get silently promoted back to f32 by
+    XLA's reduction-precision passes, while integer all-reduces keep the
+    wire at 1 byte/element (4x vs f32 before bit-packing; the Pallas
+    packbits kernel gives the full 32x on fabrics that accept custom
+    reduction ops).  Exact for <= 127 participants (sum of ±1 fits
+    int8); the production dp axes here are 16/32-way.  Returns
+    (mean_grads, new_errors).
+    """
+    axes = (tuple(axis_names) if isinstance(axis_names, (tuple, list))
+            else (axis_names,))
+    signs, scales, new_err = compress_tree(grads, errors)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axes).astype(jnp.float32)
+    sum_sign = jax.tree.map(
+        lambda s: jax.lax.psum(s.astype(jnp.int8), axes), signs)
+    avg_scale = jax.tree.map(lambda s: jax.lax.pmean(s, axes), scales)
+    mean = jax.tree.map(
+        lambda s, sc: s.astype(jnp.float32) / n * sc, sum_sign, avg_scale)
+    return mean, new_err

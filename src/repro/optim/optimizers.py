@@ -1,0 +1,194 @@
+"""Optimizers built from scratch (no optax): AdamW, Adafactor, int8-Adam.
+
+All are (init(params) -> state, update(grads, state, params, lr) ->
+(updates, state)) pairs operating on pytrees, compatible with ZeRO-1
+sharded states (runtime/sharding.opt_state_pspecs).
+
+  * adamw      : fp32 moments — the default for <100B models.
+  * adafactor  : factored second moment (row/col statistics), no first
+                 moment by default — the memory-efficient default for the
+                 giant MoEs (kimi-k2, deepseek-v3), DESIGN.md §5.
+  * adam8bit   : block-wise int8-quantized moments with fp32 per-block
+                 scales (8x optimizer-memory reduction, a distributed-
+                 optimization trick for the 1T-param training placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+# --- AdamW -------------------------------------------------------------------
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          grad_clip=1.0) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params, jnp.float32),
+                "v": _tree_zeros_like(params, jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        grads = clip_by_global_norm(grads, grad_clip)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# --- Adafactor ---------------------------------------------------------------
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
+              weight_decay=0.0, min_dim_factored=128) -> Optimizer:
+    """Factored second moments for >=2D params (rows+cols fp32 vectors)."""
+
+    def _factored(p):
+        return p.ndim >= 2 and min(p.shape[-2:]) >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def one(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True),
+                                       eps)[..., None])
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_f = tdef.unflatten([o[1] for o in out])
+        return new_params, {"f": new_f, "step": step}
+
+    return Optimizer(init, update)
+
+
+# --- int8 block-quantized Adam -------------------------------------------------
+
+_BLOCK = 256
+
+
+def _quantize_i8(x: jax.Array):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_i8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def adam8bit(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+             grad_clip=1.0) -> Optimizer:
+    def init(params):
+        def one(p):
+            q, s = _quantize_i8(jnp.zeros(p.shape, jnp.float32))
+            return {"mq": q, "ms": s, "vq": q, "vs": s}
+        return {"q": jax.tree.map(one, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        grads = clip_by_global_norm(grads, grad_clip)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def one(p, g, s):
+            g = g.astype(jnp.float32)
+            m = b1 * _dequantize_i8(s["mq"], s["ms"], p.shape) + (1 - b1) * g
+            v = b2 * _dequantize_i8(s["vq"], s["vs"], p.shape) \
+                + (1 - b2) * jnp.square(g)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            mq, ms = _quantize_i8(m)
+            vq, vs = _quantize_i8(v)
+            return ((p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                    {"mq": mq, "ms": ms, "vq": vq, "vs": vs})
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["q"])
+        out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"q": tdef.unflatten([o[1] for o in out]), "step": step})
+
+    return Optimizer(init, update)
+
+
+# --- shared utils --------------------------------------------------------------
+
+def clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor,
+            "adam8bit": adam8bit}[name](**kw)

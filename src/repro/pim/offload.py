@@ -1,0 +1,91 @@
+"""PIM offload planner: price bulk bit-wise tensor ops on DRIM vs TPU.
+
+Given a tensor op (xnor / maj3 / add / not over bit-packed operands), the
+planner lowers it to an AAP command stream over DRIM sub-arrays (rows =
+256 bits) and reports latency/energy under the paper's timing/energy
+models, next to the TPU roofline cost of executing the same op on-chip
+(VPU bitwise, HBM-bandwidth bound).  This is the codesign analysis a
+deployment would run to decide what to push into the memory fleet:
+candidates are the framework's own bulk-bitwise consumers — BitLinear
+weight/activation sign planes and 1-bit EF gradient payloads.
+
+Verdict logic: bulk bit-ops are BANDWIDTH-bound on the TPU (arithmetic
+intensity ~0.1 flop/byte), so DRIM wins whenever operands already live in
+DRAM and the result stays there; the TPU wins when operands are already
+in HBM/VMEM for adjacent matmuls.  `plan()` makes that call per op from
+the locality hint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Literal
+
+from repro.core import AAP_COUNTS, DRIM_R, DrimGeometry
+from repro.core.energy import E_ACCESS_NJ_PER_KB, E_IO_NJ_PER_KB, \
+    pim_energy_nj_per_kb
+
+# TPU v5e roofline constants (brief §Roofline)
+TPU_HBM_BW = 819e9          # bytes/s
+TPU_VPU_BITOPS = 4 * 8 * 128 * 940e6 * 32  # lanes x clock x bits: ~1.2e15
+
+OpName = Literal["xnor2", "xor2", "not", "maj3", "add", "copy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadReport:
+    op: str
+    n_bits: int
+    drim_latency_s: float
+    drim_energy_j: float
+    drim_aaps: int
+    tpu_latency_s: float
+    tpu_energy_j: float
+    winner: str
+    speedup: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+_BYTES_MOVED = {"not": 2, "xnor2": 3, "xor2": 3, "maj3": 4, "add": 5,
+                "copy": 2}
+# TPU DRAM access energy when operands must stream HBM<->compute
+_TPU_PJ_PER_BYTE = 1.3
+
+
+def plan(op: OpName, n_bits: int, *, geom: DrimGeometry = DRIM_R,
+         operands_in_dram: bool = True) -> OffloadReport:
+    aap_count = AAP_COUNTS.get(op, AAP_COUNTS["copy"])
+    waves = -(-n_bits // geom.parallel_bits)
+    drim_lat = waves * aap_count * geom.t_aap_s
+    kb = n_bits / 8.0 / 1024.0
+    drim_e = pim_energy_nj_per_kb(
+        "DRIM", op if op in ("not", "xnor2", "add") else "xnor2") * kb * 1e-9
+
+    moved_bytes = _BYTES_MOVED[op] * n_bits / 8.0
+    tpu_lat = max(moved_bytes / TPU_HBM_BW, n_bits / TPU_VPU_BITOPS)
+    tpu_e = moved_bytes * _TPU_PJ_PER_BYTE * 1e-12
+    if not operands_in_dram:
+        # host->DRAM round trip to stage operands for PIM
+        drim_e += 2 * (E_ACCESS_NJ_PER_KB + E_IO_NJ_PER_KB) * kb * 1e-9
+        drim_lat += moved_bytes / TPU_HBM_BW
+
+    winner = "DRIM" if drim_lat < tpu_lat else "TPU"
+    return OffloadReport(op=op, n_bits=n_bits, drim_latency_s=drim_lat,
+                         drim_energy_j=drim_e,
+                         drim_aaps=waves * aap_count,
+                         tpu_latency_s=tpu_lat, tpu_energy_j=tpu_e,
+                         winner=winner,
+                         speedup=tpu_lat / max(drim_lat, 1e-30))
+
+
+def plan_model_payloads(cfg) -> Dict[str, OffloadReport]:
+    """Price the framework's own bulk-bitwise payloads for an arch config:
+    1-bit EF gradient all-reduce planes + BitLinear sign planes."""
+    n_params = cfg.param_count()
+    out = {
+        "grad_sign_reduce(add)": plan("add", n_params),
+        "bitlinear_weight_xnor": plan("xnor2", n_params),
+        "weight_sign_copy": plan("copy", n_params),
+    }
+    return out

@@ -1,0 +1,122 @@
+"""Fault tolerance, straggler mitigation, elastic scaling.
+
+Designed for 1000+-node fleets; on this container the mechanisms are
+exercised by unit tests + the single-host trainer.
+
+  * Heartbeats  : every host appends (host, step, t) to a shared file/KV;
+                  the coordinator flags hosts > `straggler_factor` x median
+                  step latency (straggler) or silent past `dead_after_s`
+                  (failed).
+  * Restart     : launch/train.py wraps the step loop in
+                  `run_with_restarts`, which restores the latest atomic
+                  checkpoint after any crash (checkpoint/checkpoint.py) —
+                  checkpoint-restart is the baseline failure model for
+                  non-elastic TPU pods.
+  * Elastic     : `elastic_plan` recomputes (mesh, per-host batch) for the
+                  surviving host set; because checkpoints are host-gathered
+                  and data order is (seed, step)-deterministic, a resize is
+                  a restore onto a new mesh, not a new run.
+  * Stragglers  : gradient-accumulation microbatching (steps.py accum>1)
+                  smooths per-step variance; the monitor only *reports*
+                  hosts — eviction is the scheduler's call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostStatus:
+    host_id: int
+    last_step: int
+    last_seen: float
+    step_latency: float
+
+
+class HeartbeatMonitor:
+    """File-backed heartbeat table (stands in for the fleet KV store)."""
+
+    def __init__(self, path: str, host_id: int,
+                 straggler_factor: float = 2.0, dead_after_s: float = 60.0):
+        self.path = path
+        self.host_id = host_id
+        self.straggler_factor = straggler_factor
+        self.dead_after_s = dead_after_s
+        self._last_beat = time.time()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        now = time.time()
+        rec = {"host": self.host_id, "step": step, "t": now,
+               "lat": now - self._last_beat}
+        self._last_beat = now
+        with open(self.path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    def table(self) -> Dict[int, HostStatus]:
+        out: Dict[int, HostStatus] = {}
+        if not os.path.exists(self.path):
+            return out
+        for line in open(self.path):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn write from a dying host
+            out[r["host"]] = HostStatus(r["host"], r["step"], r["t"],
+                                        r.get("lat", 0.0))
+        return out
+
+    def report(self, now: Optional[float] = None
+               ) -> Tuple[List[int], List[int]]:
+        """-> (straggler host ids, dead host ids)."""
+        now = now or time.time()
+        tab = self.table()
+        if not tab:
+            return [], []
+        lats = sorted(h.step_latency for h in tab.values()
+                      if h.step_latency > 0)
+        med = lats[len(lats) // 2] if lats else 0.0
+        stragglers = [h.host_id for h in tab.values()
+                      if med and h.step_latency > self.straggler_factor * med]
+        dead = [h.host_id for h in tab.values()
+                if now - h.last_seen > self.dead_after_s]
+        return stragglers, dead
+
+
+def elastic_plan(n_alive_hosts: int, devices_per_host: int,
+                 global_batch: int, model_parallel: int = 16
+                 ) -> Dict[str, int]:
+    """Largest (data, model) mesh the surviving fleet supports.
+
+    model_parallel is held fixed (param shards must fit); the data axis
+    shrinks to the largest divisor of the alive device count, and the
+    per-host batch grows to keep the global batch constant.
+    """
+    n_dev = n_alive_hosts * devices_per_host
+    if n_dev % model_parallel:
+        raise ValueError(f"{n_dev} devices not divisible by TP="
+                         f"{model_parallel}")
+    data = n_dev // model_parallel
+    while global_batch % data:
+        data -= 1  # shrink until the batch divides (keeps step semantics)
+    return {"data": data, "model": model_parallel,
+            "per_host_batch": global_batch // n_alive_hosts}
+
+
+def run_with_restarts(train_once: Callable[[Optional[int]], int],
+                      max_restarts: int = 3) -> int:
+    """Checkpoint-restart driver: train_once(start_step) runs until crash
+    or completion, returning the last completed step."""
+    restarts, last = 0, None
+    while True:
+        try:
+            return train_once(last)
+        except Exception:  # noqa: BLE001 — any host failure
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            last = None  # force restore-from-latest inside train_once

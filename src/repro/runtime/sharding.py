@@ -1,0 +1,231 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for the production mesh.
+
+Layout (DESIGN.md §5):
+  * DP over ("pod", "data")        — batch dim of activations
+  * TP over "model"                — Megatron column/row parallel kernels,
+                                     vocab-parallel embedding + head
+  * EP over "model"                — MoE expert banks
+  * KV caches: sequence-sharded over "model" (flash-decoding style
+    partial-softmax), batch-sharded over DP
+  * ZeRO-1: optimizer moments additionally sharded over "data" on the
+    first divisible replicated dim
+
+Rules are path-pattern based so they survive arbitrary stacking (scan
+layers prepend leading dims; we left-pad specs with None to the leaf
+rank).  jit in/out shardings require exact divisibility, so every spec is
+SANITIZED against the actual dim sizes: a non-dividing axis falls back to
+the rule's next alternative (e.g. whisper's 51865 vocab cannot shard ->
+the embedding shards d_model instead) or to replication.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules: (path substring match, spec for the TRAILING dims)
+# ---------------------------------------------------------------------------
+
+_COLUMN = ("model",)          # shard last dim  (e.g. [D, F] -> (None, model))
+_ROW = ("model", None)        # shard first of last two ([F, D])
+_COLUMN_2 = (None, "model")   # fallback: shard the other matmul dim
+_EXPERT = ("model", None, None)  # [E, D, F] expert banks
+
+# Each rule maps a path pattern to a list of ALTERNATIVE trailing specs;
+# the first alternative whose named axes divide the dims wins.
+_PARAM_RULES = (
+    # order matters: first match wins
+    ("embed", [("model", None), (None, "model"), ()]),   # [V, D]
+    ("head", [(None, "model"), ("model", None), ()]),    # [D, V]
+    ("router/kernel", [(None, None)]),                   # replicated router
+    ("moe/gate", [_EXPERT]),
+    ("moe/up", [_EXPERT]),
+    ("moe/down", [_EXPERT]),
+    ("shared/gate/kernel", [(None, "model")]),
+    ("shared/up/kernel", [(None, "model")]),
+    ("shared/down/kernel", [("model", None)]),
+    ("wo/kernel", [_ROW, _COLUMN_2]),
+    ("wo/bkernel", [_ROW, _COLUMN_2]),
+    ("down/kernel", [_ROW, _COLUMN_2]),
+    ("down/bkernel", [_ROW, _COLUMN_2]),
+    ("out_proj/kernel", [_ROW, _COLUMN_2]),
+    ("wq_a/kernel", [(None, None)]),     # MLA low-rank down-projections
+    ("wkv_a/kernel", [(None, None)]),
+    ("kernel", [(None, "model"), ("model", None)]),  # column-parallel
+    ("bkernel", [(None, "model"), ("model", None)]),
+    ("w_packed", [("model", None)]),     # packed BitLinear [N, W]
+    ("alpha", [("model",)]),
+    ("conv_w", [(None, "model")]),
+    ("conv_b", [("model",)]),
+    ("bias", [("model",)]),
+    ("", [()]),                          # norms/scalars: replicated
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop named axes that do not evenly divide their dim (jit in/out
+    shardings require exact divisibility)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for entry, dim in zip(parts, shape):
+        ok = _axis_size(mesh, entry)
+        out.append(entry if (entry is not None and dim % ok == 0
+                             and dim >= ok) else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _spec_fits(trailing, shape, mesh: Mesh) -> bool:
+    t = tuple(trailing)
+    if len(t) > len(shape):
+        t = t[-len(shape):] if shape else ()
+    lead = (None,) * (len(shape) - len(t))
+    full = lead + t
+    for entry, dim in zip(full, shape):
+        if entry is None:
+            continue
+        n = _axis_size(mesh, entry)
+        if dim % n or dim < n:
+            return False
+    return True
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    s = _path_str(path)
+    for pat, alternatives in _PARAM_RULES:
+        if pat and pat not in s:
+            continue
+        for trailing in alternatives:
+            if _spec_fits(trailing, leaf.shape, mesh):
+                t = tuple(trailing)
+                if len(t) > leaf.ndim:
+                    t = t[-leaf.ndim:] if leaf.ndim else ()
+                lead = (None,) * (leaf.ndim - len(t))
+                return P(*lead, *t)
+        return P()  # no alternative fits: replicate
+    return P()
+
+
+def param_pspecs(params, mesh: Mesh, family: str | None = None):
+    """family "ssm" (pure Mamba2): REPLICATED params + sequence-parallel
+    activations (S over `model`) — the mixer dims (24 heads, fused
+    3352-wide in_proj, 50280 vocab) do not divide a 16-way TP axis, and
+    TP fallbacks there cost full [B,S,V]/[B,S,D] all-reduces.  A 130M-
+    class SSM is exactly the regime where replicated weights + SP win."""
+    if family == "ssm":
+        return jax.tree.map(lambda l: P(), params)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(p, l, mesh), params)
+
+
+def param_shardings(mesh: Mesh, params, family: str | None = None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh, family))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: extend a param spec with "data" on the first divisible free dim
+# ---------------------------------------------------------------------------
+
+def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
+    if "data" not in mesh.axis_names:
+        return spec
+    ndata = mesh.shape["data"]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (axis, dim) in enumerate(zip(parts, shape)):
+        if axis is None and dim % ndata == 0 and dim >= ndata:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def opt_state_pspecs(params, mesh: Mesh, zero1: bool = True,
+                     family: str | None = None):
+    """Moment tensors: param spec (+ data axis when zero1)."""
+    specs = param_pspecs(params, mesh, family)
+    if not zero1:
+        return specs
+    return jax.tree.map(
+        lambda s, p: zero1_spec(s, p.shape, mesh), specs, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_tree):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return sanitize_spec(P(dp, *(None,) * (leaf.ndim - 1)),
+                             leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """KV caches: [L, B, S, ...] -> (None, dp, 'model', None...).
+
+    SSM states [L, B, H, P, N] -> (None, dp, 'model', None, None).
+    Leading stacked dims (layer/group/site) are any dims before batch;
+    we detect batch as dim index (ndim - 4) for attn k/v and (ndim - 3)
+    for ssm conv, via path names.
+    """
+    dp = dp_axes(mesh)
+    s = _path_str(path)
+    nd = leaf.ndim
+    if s.endswith("k") or s.endswith("v"):          # [.., B, S, H, dh]
+        lead = (None,) * (nd - 4)
+        return P(*lead, dp, "model", None, None)
+    if "ckv" in s or "k_rope" in s:                  # [.., B, S, R]
+        lead = (None,) * (nd - 3)
+        return P(*lead, dp, "model", None)
+    if "state" in s:                                 # [.., B, H, P, N]
+        lead = (None,) * (nd - 4)
+        return P(*lead, dp, "model", None, None)
+    if "conv" in s:                                  # [.., B, K-1, C]
+        lead = (None,) * (nd - 3)
+        return P(*lead, dp, None, "model")
+    lead = (None,) * max(nd - 1, 0)
+    return P(dp, *lead) if nd else P()
+
+
+def cache_pspecs(mesh: Mesh, caches):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: sanitize_spec(cache_spec(p, l, mesh), l.shape, mesh),
+        caches)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """Residual-stream constraint [B, S, D]."""
+    return P(dp_axes(mesh), None, None)

@@ -1,0 +1,193 @@
+"""pjit train / prefill / decode steps with full sharding annotations.
+
+`make_train_step(cfg, mesh, ...)` returns (step_fn, shardings) where
+step_fn(state, batch) -> (state, metrics) is ready for jax.jit with the
+returned in/out shardings — used identically by the real trainer
+(launch/train.py) and the AOT dry-run (launch/dryrun.py).
+
+TrainState = {"params", "opt", "errors"?, "step"}; gradient flow:
+
+  value_and_grad(train_loss)           # DP mean implicit via pjit
+  [optional 1-bit EF compression]      # optim/compress.py — 32x AR bytes
+  optimizer.update                     # AdamW / Adafactor / int8-Adam
+  donate state                         # in-place buffers
+
+Distribution tricks wired here (DESIGN.md §5): ZeRO-1 moment sharding,
+remat inside the layer scan (models/), collective-friendly microbatching
+(grad accumulation over `accum` splits for straggler smoothing).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (decode_step as model_decode, init_params, prefill
+                          as model_prefill, train_loss)
+from repro.optim import (compressed_allreduce, get_optimizer, init_errors,
+                         warmup_cosine)
+from . import sharding as shd
+
+
+# --- state construction -------------------------------------------------------
+
+def make_train_state(key, cfg, optimizer):
+    params = init_params(key, cfg)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg, optimizer, key=None):
+    """eval_shape'd state — no allocation; for dry-run + checkpoint meta."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        lambda k: make_train_state(k, cfg, optimizer), key)
+
+
+def train_state_pspecs(state_shape, mesh, zero1: bool = True,
+                       family: str | None = None):
+    """PartitionSpecs for the full train state pytree."""
+    params = state_shape["params"]
+    pspec = shd.param_pspecs(params, mesh, family)
+
+    def opt_spec(path, leaf):
+        s = shd._path_str(path)
+        # moment tensors mirror their param's spec (+ ZeRO-1 data axis);
+        # match by stripping the leading "opt/m|v|f|q" prefix
+        for prefix in ("m/", "v/", "f/", "q/"):
+            if s.startswith(prefix):
+                sub = s[len(prefix):]
+                for suffix in ("/vr", "/vc", "/v", "/mq", "/ms", "/vq",
+                               "/vs"):
+                    if sub.endswith(suffix):
+                        sub = sub[: -len(suffix)]
+                        break
+                spec = _lookup_param_spec(pspec, sub)
+                if spec is not None:
+                    t = tuple(spec)[:leaf.ndim]
+                    t = t + (None,) * (leaf.ndim - len(t))
+                    spec2 = P(*t)
+                    return (shd.zero1_spec(spec2, leaf.shape, mesh)
+                            if zero1 else spec2)
+        return P(*(None,) * leaf.ndim) if leaf.ndim else P()
+
+    def opt_spec_sane(path, leaf):
+        return shd.sanitize_spec(opt_spec(path, leaf), leaf.shape, mesh)
+
+    opt = jax.tree_util.tree_map_with_path(opt_spec_sane,
+                                           state_shape["opt"])
+    return {"params": pspec, "opt": opt, "step": P()}
+
+
+def _lookup_param_spec(pspec_tree, path_str: str):
+    node = pspec_tree
+    for part in path_str.split("/"):
+        if isinstance(node, dict) and part in node:
+            node = node[part]
+        else:
+            return None
+    return node if isinstance(node, P) else None
+
+
+def state_shardings(state_shape, mesh, zero1: bool = True,
+                    family: str | None = None):
+    specs = train_state_pspecs(state_shape, mesh, zero1, family)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --- train step ----------------------------------------------------------------
+
+def make_train_step(cfg, mesh, *, optimizer_name: str = "adamw",
+                    peak_lr: float = 3e-4, warmup: int = 2000,
+                    total_steps: int = 100_000, accum: int = 1,
+                    compress: bool = False, zero1: bool = True):
+    """Returns (step_fn, state_shape, state_shardings, batch_shardings_fn)."""
+    optimizer = get_optimizer(optimizer_name)
+
+    def step_fn(state, batch):
+        params = state["params"]
+
+        def loss_fn(p, b):
+            # NOTE: an upfront bf16 compute-copy of the param tree was
+            # tried here (hypothesis: GSPMD's per-layer f32 weight
+            # all-gathers in bwd would halve) — REFUTED: identical
+            # roofline terms, +40-60% peak memory from the materialized
+            # copies (EXPERIMENTS.md §Perf it6).  dense()/einsum casts
+            # per use remain the right place.
+            return train_loss(p, cfg, b)
+
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, msum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, msum + loss), None
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero_g, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {"ce": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if compress:
+            # 1-bit EF compression of the DP all-reduce (paper technique
+            # on the wire).  pjit's implicit mean already averaged over
+            # DP; the explicit encode/decode keeps the HLO payload honest
+            # and the EF residual in the state.
+            grads, new_err = _ef_compress(grads, state["errors"])
+        lr = warmup_cosine(state["step"], peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params,
+                                               lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if compress:
+            new_state["errors"] = new_err
+        metrics = dict(metrics)
+        metrics.update(loss=loss, lr=lr,
+                       grad_norm=_global_norm(grads))
+        return new_state, metrics
+
+    def init_state(key):
+        st = make_train_state(key, cfg, optimizer)
+        if compress:
+            st["errors"] = init_errors(st["params"])
+        return st
+
+    return step_fn, init_state, optimizer
+
+
+def _ef_compress(grads, errors):
+    from repro.optim.compress import compress_tree, decompress_tree
+    signs, scales, new_err = compress_tree(grads, errors)
+    return decompress_tree(signs, scales), new_err
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+# --- serve steps -----------------------------------------------------------------
+
+def make_prefill_step(cfg):
+    def fn(params, batch):
+        return model_prefill(params, cfg, batch)
+    return fn
+
+
+def make_decode_step(cfg, ctx_len: int):
+    def fn(params, tokens, caches, pos):
+        return model_decode(params, cfg, tokens, caches, pos, ctx_len)
+    return fn

@@ -1,0 +1,69 @@
+"""Analog SA model: digital equivalence at 0 variation + Table-3 trends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (dra_analog, tra_analog, monte_carlo_error_rates,
+                        PAPER_TABLE3)
+
+
+def test_dra_analog_truth_table_zero_variation():
+    a = jnp.asarray([0, 0, 1, 1], jnp.uint32)
+    b = jnp.asarray([0, 1, 0, 1], jnp.uint32)
+    xnor_, xor_ = dra_analog(a, b, variation=0.0)
+    np.testing.assert_array_equal(np.asarray(xnor_), [1, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(xor_), [0, 1, 1, 0])
+
+
+def test_tra_analog_truth_table_zero_variation():
+    a = jnp.asarray([0, 0, 0, 0, 1, 1, 1, 1], jnp.uint32)
+    b = jnp.asarray([0, 0, 1, 1, 0, 0, 1, 1], jnp.uint32)
+    c = jnp.asarray([0, 1, 0, 1, 0, 1, 0, 1], jnp.uint32)
+    maj = tra_analog(a, b, c, variation=0.0)
+    np.testing.assert_array_equal(np.asarray(maj), [0, 0, 0, 1, 0, 1, 1, 1])
+
+
+def test_analog_equals_digital_bulk_zero_variation():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 2, 4096), jnp.uint32)
+    b = jnp.asarray(rng.integers(0, 2, 4096), jnp.uint32)
+    xnor_, xor_ = dra_analog(a, b, variation=0.0)
+    np.testing.assert_array_equal(np.asarray(xnor_),
+                                  np.asarray(1 - (a ^ b)))
+    np.testing.assert_array_equal(np.asarray(xor_), np.asarray(a ^ b))
+
+
+def test_monte_carlo_table3_trends():
+    """DRA strictly more robust than TRA; error monotone in variation."""
+    rates = monte_carlo_error_rates(trials=4000, seed=1)
+    for var, r in rates.items():
+        # MC tolerance: DRA never (meaningfully) worse than TRA
+        assert r["DRA"] <= r["TRA"] + 2.0, (var, r)
+    # at +-5% both must be (near) zero, mirroring Table 3
+    assert rates[0.05]["DRA"] < 0.1 and rates[0.05]["TRA"] < 0.5
+    # at +-10%: DRA ~0 (paper: 0.00), TRA small-but-nonzero (paper: 0.18)
+    assert rates[0.10]["DRA"] < 0.2
+    assert rates[0.10]["TRA"] < 3.0
+    # monotonicity of TRA error with variation
+    vs = sorted(rates)
+    tra = [rates[v]["TRA"] for v in vs]
+    assert all(x <= y + 0.5 for x, y in zip(tra, tra[1:]))
+    # large-variation corner: both fail noticeably, TRA worse (Table 3)
+    assert rates[0.30]["TRA"] > 5.0
+    assert rates[0.30]["DRA"] > 2.0
+
+
+def test_monte_carlo_matches_paper_bands():
+    """Absolute calibration: each corner within a small band of Table 3."""
+    rates = monte_carlo_error_rates(trials=10_000, seed=0)
+    for var, paper in PAPER_TABLE3.items():
+        sim = rates[var]
+        for kind in ("TRA", "DRA"):
+            # onset corners are (near-)exact; ramped corners within 2x + 3pp
+            assert abs(sim[kind] - paper[kind]) <= max(3.0,
+                                                       paper[kind] * 1.0), (
+                var, kind, sim[kind], paper[kind])
+
+
+def test_paper_table3_reference_shape():
+    assert set(PAPER_TABLE3) == {0.05, 0.10, 0.15, 0.20, 0.30}

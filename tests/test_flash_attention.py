@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel vs dense oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import sdpa_ref
+
+
+def _mk(b, h, hkv, sq, sk, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    return q, k, v
+
+
+CASES = [
+    # b, h, hkv, sq, sk, d, bq, bk, causal, dtype
+    (1, 1, 1, 128, 128, 64, 64, 64, True, jnp.float32),
+    (2, 4, 2, 128, 256, 64, 64, 128, True, jnp.float32),
+    (1, 2, 2, 256, 256, 32, 128, 64, False, jnp.float32),
+    (2, 8, 2, 128, 128, 64, 128, 128, True, jnp.bfloat16),
+    (1, 4, 1, 64, 192, 128, 64, 64, True, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,sk,d,bq,bk,causal,dtype", CASES)
+def test_flash_forward(b, h, hkv, sq, sk, d, bq, bk, causal, dtype):
+    q, k, v = _mk(b, h, hkv, sq, sk, d, dtype)
+    got = flash_attention(q, k, v, causal, h // hkv, bq, bk, True)
+    want = sdpa_ref(q, k, v, causal=causal, n_rep=h // hkv)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_backward(causal):
+    b, h, hkv, sq, sk, d, bq, bk = 1, 4, 2, 128, 128, 32, 64, 64
+    q, k, v = _mk(b, h, hkv, sq, sk, d, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return (flash_attention(q, k, v, causal, h // hkv, bq, bk, True)
+                ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (sdpa_ref(q, k, v, causal=causal, n_rep=h // hkv) ** 2).sum()
+
+    g_kernel = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for gk, gr, name in zip(g_kernel, g_ref, "qkv"):
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"d{name}")

@@ -1,0 +1,141 @@
+"""AAP ISA / Table-2 microprogram tests, incl. hypothesis property tests.
+
+Each microprogram executor is jitted ONCE at module scope (the command
+stream is static; only row data varies across hypothesis examples) to keep
+single-core CPU compile time negligible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AAP, AAP_COUNTS, cost, encode, load_rows,
+                        make_subarray, microprogram_add, microprogram_copy,
+                        microprogram_maj3, microprogram_min3,
+                        microprogram_not, microprogram_xnor2,
+                        microprogram_xor2, multibit_add_program,
+                        pack_bits, unpack_bits, run_program, run_program_py)
+
+WORDS = 2  # 64-bit rows keep tests fast
+_T = make_subarray(n_data=32, row_bits=WORDS * 32)  # address template
+
+PROG_XNOR = microprogram_xnor2(_T, 0, 1, 10)
+PROG_XOR = microprogram_xor2(_T, 0, 1, 10)
+PROG_MAJ = microprogram_maj3(_T, 0, 1, 2, 10)
+PROG_MIN = microprogram_min3(_T, 0, 1, 2, 11)
+PROG_NOT = microprogram_not(_T, 1, 12)
+PROG_COPY = microprogram_copy(_T, 2, 13)
+PROG_ADD = microprogram_add(_T, 0, 1, 2, 20, 21)
+
+_EXEC = {id(p): jax.jit(lambda sa, _p=p: run_program_py(sa, _p))
+         for p in (PROG_XNOR, PROG_XOR, PROG_MAJ, PROG_MIN, PROG_NOT,
+                   PROG_COPY, PROG_ADD)}
+
+
+def run(prog, rows):
+    sa = load_rows(_T, 0, jnp.asarray(rows, jnp.uint32))
+    return _EXEC[id(prog)](sa)
+
+
+u32rows = st.lists(
+    st.lists(st.integers(0, 2**32 - 1), min_size=WORDS, max_size=WORDS),
+    min_size=3, max_size=3)
+
+HS = settings(max_examples=10, deadline=None)
+
+
+@HS
+@given(u32rows)
+def test_xnor2_program_matches_boolean(rows):
+    out = run(PROG_XNOR, rows)
+    expect = ~(np.uint32(rows[0]) ^ np.uint32(rows[1]))
+    np.testing.assert_array_equal(np.asarray(out.data[10]), expect)
+    assert cost(PROG_XNOR)[0] == AAP_COUNTS["xnor2"] == 3
+
+
+@HS
+@given(u32rows)
+def test_xor2_program_matches_boolean(rows):
+    out = run(PROG_XOR, rows)
+    np.testing.assert_array_equal(np.asarray(out.data[10]),
+                                  np.uint32(rows[0]) ^ np.uint32(rows[1]))
+
+
+@HS
+@given(u32rows)
+def test_maj3_min3(rows):
+    a, b, c = (np.uint32(r) for r in rows)
+    maj = (a & b) | (a & c) | (b & c)
+    np.testing.assert_array_equal(np.asarray(run(PROG_MAJ, rows).data[10]),
+                                  maj)
+    np.testing.assert_array_equal(np.asarray(run(PROG_MIN, rows).data[11]),
+                                  ~maj)
+
+
+@HS
+@given(u32rows)
+def test_not_copy(rows):
+    np.testing.assert_array_equal(np.asarray(run(PROG_NOT, rows).data[12]),
+                                  ~np.uint32(rows[1]))
+    np.testing.assert_array_equal(np.asarray(run(PROG_COPY, rows).data[13]),
+                                  np.uint32(rows[2]))
+
+
+@HS
+@given(u32rows)
+def test_full_adder_slice(rows):
+    """Table-2 adder: Sum = Di^Dj^Dk, Cout = MAJ3 — 7 AAPs."""
+    assert cost(PROG_ADD)[0] == AAP_COUNTS["add"] == 7
+    out = run(PROG_ADD, rows)
+    a, b, c = (np.uint32(r) for r in rows)
+    np.testing.assert_array_equal(np.asarray(out.data[20]), a ^ b ^ c)
+    np.testing.assert_array_equal(np.asarray(out.data[21]),
+                                  (a & b) | (a & c) | (b & c))
+
+
+def test_scan_interpreter_equals_python():
+    """lax.scan interpreter == eager interpreter on a mixed program."""
+    rng = np.random.default_rng(7)
+    rows = rng.integers(0, 2**32, (3, WORDS), dtype=np.uint32)
+    sa = load_rows(_T, 0, jnp.asarray(rows))
+    prog = (PROG_ADD + microprogram_xnor2(_T, 20, 21, 22)
+            + microprogram_not(_T, 22, 23))
+    out_scan = jax.jit(run_program)(sa, encode(prog))
+    out_py = run_program_py(sa, prog)
+    np.testing.assert_array_equal(np.asarray(out_scan.data),
+                                  np.asarray(out_py.data))
+    np.testing.assert_array_equal(np.asarray(out_scan.dcc),
+                                  np.asarray(out_py.dcc))
+
+
+def test_multibit_ripple_add_matches_integer_add():
+    """4-bit ripple-carry over bit-plane rows == integer addition."""
+    rng = np.random.default_rng(3)
+    n_el = WORDS * 32
+    a = rng.integers(0, 16, n_el).astype(np.uint32)
+    b = rng.integers(0, 16, n_el).astype(np.uint32)
+
+    def plane_rows(x):
+        return jnp.stack([pack_bits(jnp.asarray((x >> i) & 1, jnp.uint32))
+                          for i in range(4)])
+
+    sa = load_rows(_T, 0, plane_rows(a))
+    sa = load_rows(sa, 4, plane_rows(b))
+    # row 8 = cin (zeros); sums -> rows 9..12; carries -> rows 13..16
+    prog = multibit_add_program(sa, [0, 1, 2, 3], [4, 5, 6, 7], 8,
+                                [9, 10, 11, 12], [13, 14, 15, 16])
+    assert cost(prog)[0] == 4 * 7
+    out = run_program_py(sa, prog)
+
+    s_bits = np.stack([np.asarray(unpack_bits(out.data[9 + i]))
+                       for i in range(4)])
+    c_out = np.asarray(unpack_bits(out.data[16]))
+    got = sum((s_bits[i].astype(np.uint32) << i) for i in range(4)) \
+        + (c_out.astype(np.uint32) << 4)
+    np.testing.assert_array_equal(got, a + b)
+
+
+def test_encode_rejects_bad_arity():
+    with pytest.raises(ValueError):
+        AAP(2, (1, 2))  # DRA needs 3 addresses

@@ -1,0 +1,97 @@
+"""MoE dispatch-path equivalence: ep (shard_map) == grouped == global.
+
+With capacity high enough that nothing drops, all three strategies must
+produce identical outputs and (for ep vs global) matching gradients —
+the §Perf hillclimb swapped strategies, so this is the guard that the
+55x-faster path computes the same function.
+"""
+import os
+
+import pytest
+
+# 8 fake devices BEFORE jax import (this file must not run after other
+# tests have initialized jax... it tolerates 1 device by skipping).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.moe import _capacity, moe_ffn, moe_init  # noqa: E402
+
+
+def _setup(arch="kimi-k2-1t-a32b", b=4, s=16):
+    cfg = get_smoke_config(arch)
+    cfg_hi = cfg.replace(capacity_factor=float(cfg.n_experts))  # no drops
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, cfg_hi)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, s, cfg.d_model), jnp.float32)
+    return cfg_hi, p, x
+
+
+def test_grouped_equals_global_nodrop():
+    cfg, p, x = _setup()
+    y_g, aux_g = moe_ffn(p, cfg.replace(moe_dispatch="global"), x)
+    y_r, aux_r = moe_ffn(p, cfg.replace(moe_dispatch="grouped"), x)
+    np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_g),
+                               rtol=2e-5, atol=2e-5)
+    for k in aux_g:
+        np.testing.assert_allclose(float(aux_r[k]), float(aux_g[k]),
+                                   rtol=1e-5)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 fake devices")
+def test_ep_shard_map_equals_global_nodrop():
+    cfg, p, x = _setup()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    y_g, _ = moe_ffn(p, cfg.replace(moe_dispatch="global"), x)
+    with mesh:
+        y_ep = jax.jit(lambda pp, xx: moe_ffn(
+            pp, cfg.replace(moe_dispatch="ep"), xx)[0])(p, x)
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_g),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 fake devices")
+def test_ep_shard_map_gradients_match():
+    cfg, p, x = _setup()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    def loss(mode):
+        return lambda pp, xx: moe_ffn(
+            pp, cfg.replace(moe_dispatch=mode), xx)[0].sum()
+
+    g_ref = jax.grad(loss("global"))(p, x)
+    with mesh:
+        g_ep = jax.jit(jax.grad(loss("ep")))(p, x)
+    m = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), g_ep, g_ref)))
+    assert m < 1e-3, m
+
+
+def test_capacity_drops_are_deterministic():
+    """With tight capacity, grouped dispatch drops the same tokens on
+    every invocation (static shapes, stable sort)."""
+    cfg, p, x = _setup()
+    tight = cfg.replace(capacity_factor=1.0)
+    y1, _ = moe_ffn(p, tight, x)
+    y2, _ = moe_ffn(p, tight, x)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert _capacity(x.shape[1], tight) >= 8
+
+
+def test_topk_local_matches_lax_topk():
+    from repro.models.moe import _topk_local
+    rng = np.random.default_rng(0)
+    probs = jnp.asarray(rng.random((3, 7, 33)).astype(np.float32))
+    w1, e1 = _topk_local(probs, 4)
+    w2, e2 = jax.lax.top_k(probs, 4)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    # ties: first index wins in both
+    tied = jnp.ones((2, 5), jnp.float32)
+    _, et = _topk_local(tied, 3)
+    np.testing.assert_array_equal(np.asarray(et),
+                                  np.asarray(jax.lax.top_k(tied, 3)[1]))

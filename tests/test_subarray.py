@@ -1,0 +1,91 @@
+"""Bit-accuracy tests for the DRIM sub-array model (paper §3.1, Fig. 5/6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (make_subarray, load_rows, activate_read,
+                        aap_copy, aap_dra, aap_tra, pack_bits, unpack_bits)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_rows(n, words, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, (n, words), dtype=np.uint32))
+
+
+@pytest.fixture
+def sa():
+    s = make_subarray(n_data=16, row_bits=128)
+    return load_rows(s, 0, rand_rows(16, 4))
+
+
+def test_pack_unpack_roundtrip():
+    rows = rand_rows(3, 4, seed=1)
+    assert (pack_bits(unpack_bits(rows)) == rows).all()
+
+
+def test_activate_read_normal(sa):
+    assert (activate_read(sa, 5) == sa.data[5]).all()
+
+
+def test_copy(sa):
+    out = aap_copy(sa, 3, 7)
+    assert (out.data[7] == sa.data[3]).all()
+    assert (out.data[3] == sa.data[3]).all()  # non-destructive read
+
+
+def test_not_via_dcc(sa):
+    # AAP(D_i, dcc2) stores complement; AAP(dcc1, D_r) reads it back.
+    out = aap_copy(sa, 2, sa.wl_dcc(2))
+    out = aap_copy(out, out.wl_dcc(1), 9)
+    assert (out.data[9] == ~sa.data[2]).all()
+
+
+def test_dra_xnor_on_bl(sa):
+    """DRA: BL carries XNOR; sources overwritten with the BL value."""
+    a, b = sa.data[1], sa.data[2]
+    s = aap_copy(sa, 1, sa.wl_x(1))
+    s = aap_copy(s, 2, sa.wl_x(2))
+    s = aap_dra(s, s.wl_x(1), s.wl_x(2), 10)
+    xnor = ~(a ^ b)
+    assert (s.data[10] == xnor).all()
+    assert (s.data[s.wl_x(1)] == xnor).all()  # destructive (Fig. 6)
+    assert (s.data[s.wl_x(2)] == xnor).all()
+
+
+def test_dra_xor_via_dcc(sa):
+    """XOR2 = DRA result taken from BL̄ through a DCC cell (Eq. 1)."""
+    a, b = sa.data[4], sa.data[5]
+    s = aap_copy(sa, 4, sa.wl_x(1))
+    s = aap_copy(s, 5, sa.wl_x(2))
+    s = aap_dra(s, s.wl_x(1), s.wl_x(2), s.wl_dcc(2))
+    s = aap_copy(s, s.wl_dcc(1), 11)
+    assert (s.data[11] == (a ^ b)).all()
+
+
+def test_tra_maj3(sa):
+    a, b, c = sa.data[0], sa.data[1], sa.data[2]
+    s = aap_copy(sa, 0, sa.wl_x(1))
+    s = aap_copy(s, 1, sa.wl_x(2))
+    s = aap_copy(s, 2, sa.wl_x(3))
+    s = aap_tra(s, s.wl_x(1), s.wl_x(2), s.wl_x(3), 12)
+    maj = (a & b) | (a & c) | (b & c)
+    assert (s.data[12] == maj).all()
+    for k in (1, 2, 3):
+        assert (s.data[s.wl_x(k)] == maj).all()
+
+
+def test_dra_truth_table_exhaustive():
+    """All four (Di, Dj) combinations per Fig. 5/6."""
+    s = make_subarray(n_data=4, row_bits=32)
+    di = jnp.asarray([[0b0101]], jnp.uint32)  # bit i of Di
+    dj = jnp.asarray([[0b0011]], jnp.uint32)  # bit i of Dj
+    s = load_rows(s, 0, di)
+    s = load_rows(s, 1, dj)
+    s = aap_copy(s, 0, s.wl_x(1))
+    s = aap_copy(s, 1, s.wl_x(2))
+    s = aap_dra(s, s.wl_x(1), s.wl_x(2), 2)
+    got = int(s.data[2][0]) & 0xF
+    assert got == (~(0b0101 ^ 0b0011)) & 0xF  # XNOR: 00->1 01->0 10->0 11->1
