@@ -5,8 +5,17 @@ paper's three ops x eight platforms, vector lengths 2^27..2^29 bits, plus
 the functional simulator executing the real AAP streams for a scaled-down
 sub-array fleet (validating the cycle counts the model uses).
 
+With `--simulate`, the throughput-vs-parallelism sweep is additionally
+reproduced from DEVICE EXECUTION: for each fleet geometry the bulk-op
+scheduler (`pim/scheduler.py`) tiles real random operands onto the
+(chip, bank, subarray) slots of a `DrimDevice`, executes the batched AAP
+streams (vmapped scan), verifies the results bit-for-bit against
+`kernels/ref.py`, and derives throughput from the measured wave/cycle
+counts — which must land within 5% of the closed-form model at every
+point of the sweep.
+
 Printed: throughput table (Gbit/s), headline ratios vs the paper's
-claims, and relative deviation.
+claims, relative deviation, and (with --simulate) the sweep table.
 """
 from __future__ import annotations
 
@@ -14,10 +23,17 @@ import time
 
 import numpy as np
 
-from repro.core import (AAP_COUNTS, DRIM_R, PAPER_CLAIMS, CONTEXT_CLAIMS,
-                        all_platforms)
+from repro.core import (AAP_COUNTS, DRIM_R, DrimGeometry, PAPER_CLAIMS,
+                        CONTEXT_CLAIMS, all_platforms, drim_throughput_bits)
 
 OPS = ("not", "xnor2", "add")
+
+# Parallelism sweep for --simulate: (chips, banks, subarrays_per_bank),
+# slot counts 1 -> 64.  Row width is the paper's 256 bits throughout.
+SIM_SWEEP = ((1, 1, 1), (1, 1, 2), (1, 1, 4), (1, 2, 4), (1, 4, 4),
+             (1, 8, 4), (2, 8, 4))
+SIM_WAVES = 2  # waves per point: full occupancy, >1 wave exercised
+SIM_TOL = 0.05
 
 
 def throughput_table():
@@ -63,11 +79,43 @@ def simulate_cycle_counts():
     return checks
 
 
-def run(csv_rows):
+def simulate_parallelism_sweep(ops=OPS, sweep=SIM_SWEEP, waves=SIM_WAVES):
+    """Fig. 8 throughput-vs-parallelism from simulated device execution.
+
+    Returns [(op, geom, sim_thpt, analytic_thpt, deviation), ...]; also
+    verifies every executed result against the `kernels/ref.py` oracle.
+    Raises AssertionError if any point deviates > SIM_TOL or any bit is
+    wrong.
+    """
+    from repro.pim.scheduler import execute, expected_results, \
+        random_operands
+
+    out = []
+    for i, (chips, banks, subs) in enumerate(sweep):
+        geom = DrimGeometry(chips=chips, banks=banks,
+                            subarrays_per_bank=subs, row_bits=256)
+        n_bits = waves * geom.parallel_bits
+        n_words = n_bits // 32
+        for op in ops:
+            args = random_operands(op, n_words, seed=8 + i)
+            results, sched = execute(op, *args, geom=geom)
+            for got, want in zip(results, expected_results(op, args)):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+            sim = sched.throughput_bits_s
+            ana = drim_throughput_bits(geom, op)
+            dev = sim / ana - 1.0
+            assert abs(dev) <= SIM_TOL, (op, geom, dev)
+            out.append((op, geom, sim, ana, dev))
+    return out
+
+
+def run(csv_rows, simulate=False):
     t0 = time.time()
     rows = throughput_table()
     checks = simulate_cycle_counts()
     rr = ratios(rows)
+    sweep = simulate_parallelism_sweep() if simulate else None
     us = (time.time() - t0) * 1e6
 
     print("\n-- Fig. 8: throughput (Gbit/s), analytical model --")
@@ -86,6 +134,20 @@ def run(csv_rows):
               f"{claim:7.2f}  dev {dev:+.1%}")
     print(f"\nAAP counts validated on functional simulator: {checks}")
 
+    if sweep is not None:
+        print("\n-- throughput vs parallelism: simulated device execution "
+              "vs analytic model --")
+        print(f"{'geometry':<16}{'slots':>6}{'op':>8}{'sim Gb/s':>12}"
+              f"{'model Gb/s':>12}{'dev':>8}")
+        for op, geom, sim, ana, dev in sweep:
+            gname = f"{geom.chips}c x {geom.banks}b x " \
+                    f"{geom.subarrays_per_bank}s"
+            print(f"{gname:<16}{geom.n_subarrays:>6}{op:>8}"
+                  f"{sim / 1e9:>12.3f}{ana / 1e9:>12.3f}{dev:>+8.1%}")
+        worst_sim = max(abs(d) for *_, d in sweep)
+        print(f"worst simulated-vs-model deviation: {worst_sim:.1%} "
+              f"(tolerance {SIM_TOL:.0%}); all results bit-exact vs ref")
+
     worst = max(abs(d) for _, _, d in rr.values())
     csv_rows.append(("fig8_throughput", us,
                      f"worst_ratio_dev={worst:.3f}"))
@@ -93,4 +155,9 @@ def run(csv_rows):
 
 
 if __name__ == "__main__":
-    run([])
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--simulate", action="store_true",
+                    help="reproduce the parallelism sweep from simulated "
+                         "device execution (scheduler + DrimDevice)")
+    run([], simulate=ap.parse_args().simulate)

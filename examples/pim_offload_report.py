@@ -9,6 +9,13 @@ sign-plane copies) on a DRIM-R fleet (AAP streams; paper timing/energy)
 versus executing the same op on the TPU (HBM-bandwidth bound), and
 prints the placement verdict. This is the analysis a deployment team
 runs to decide what to push into processing-in-memory.
+
+Pricing comes from the bulk-op scheduler (`pim/scheduler.py`): operands
+are tiled into 256-bit rows and assigned to (chip, bank, subarray) slots,
+so each row also shows the parallelism breakdown (waves x active
+sub-arrays).  The final section cross-checks the closed-form schedule
+against `simulate=True` — the same op actually executed on the
+functional `DrimDevice` fleet.
 """
 from repro.configs.registry import ARCHS
 from repro.configs import get_config
@@ -17,14 +24,15 @@ from repro.pim.offload import plan, plan_model_payloads
 
 def main():
     print(f"{'arch':<18}{'payload':<26}{'bits':>10}{'DRIM':>11}"
-          f"{'TPU':>11}{'speedup':>9}  winner")
+          f"{'TPU':>11}{'speedup':>9}{'waves':>8}{'subarr':>7}  winner")
     for arch in ARCHS:
         cfg = get_config(arch)
         for name, rep in plan_model_payloads(cfg).items():
             print(f"{arch:<18}{name:<26}{rep.n_bits:>10.2e}"
                   f"{rep.drim_latency_s * 1e3:>9.2f}ms"
                   f"{rep.tpu_latency_s * 1e3:>9.2f}ms"
-                  f"{rep.speedup:>9.2f}  {rep.winner}")
+                  f"{rep.speedup:>9.2f}{rep.waves:>8}"
+                  f"{rep.active_subarrays:>7}  {rep.winner}")
 
     print("\n-- locality sensitivity (1 Gbit xnor2) --")
     for in_dram in (True, False):
@@ -32,6 +40,18 @@ def main():
         print(f"operands_in_dram={in_dram!s:<6} DRIM "
               f"{rep.drim_latency_s * 1e3:7.3f} ms vs TPU "
               f"{rep.tpu_latency_s * 1e3:7.3f} ms -> {rep.winner}")
+
+    print("\n-- closed-form schedule vs simulated execution (1 Mbit) --")
+    for op in ("xnor2", "add"):
+        ana = plan(op, 2**20)
+        sim = plan(op, 2**20, simulate=True)
+        dev = sim.drim_latency_s / ana.drim_latency_s - 1.0
+        print(f"{op:<7} schedule {ana.drim_latency_s * 1e6:7.2f} us  "
+              f"simulated {sim.drim_latency_s * 1e6:7.2f} us  "
+              f"dev {dev:+.2%}  (tiles={sim.tiles}, waves={sim.waves}, "
+              f"active={sim.active_subarrays}, "
+              f"occupancy={sim.occupancy:.0%})")
+
     print("\nVerdict: PIM wins when operands already live in DRAM and the"
           "\nresult stays there; staging through the host erases the win.")
 

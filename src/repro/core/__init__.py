@@ -11,6 +11,9 @@ from .isa import (AAP, OP_COPY, OP_COPY2, OP_DRA, OP_TRA, encode, cost,
                   microprogram_copy, microprogram_not, microprogram_maj3,
                   microprogram_min3, microprogram_xnor2, microprogram_xor2,
                   microprogram_add, multibit_add_program)
+from .device import (DrimDevice, make_device, device_template,
+                     device_load_rows, device_broadcast_rows,
+                     device_read_row, device_run_program)
 from .analog import (AnalogParams, dra_analog, tra_analog,
                      monte_carlo_error_rates, PAPER_TABLE3)
 from .timing import (DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits,

@@ -1,0 +1,146 @@
+"""Bank/chip-level DRIM device model: a [chips, banks, subarrays] stack.
+
+The paper's headline throughput (Fig. 8) comes from *inter-subarray
+parallelism*: every computational sub-array of every bank (and every chip
+of a rank) executes the same AAP sequence in lock-step over different
+rows — a SIMD machine whose lanes are 256-bit DRAM rows.  `DrimDevice`
+models exactly that: the full `[chips, banks, subarrays]` stack of
+`SubArray` states held as ONE batched pytree, with program execution a
+single `jax.vmap` of the `lax.scan` AAP interpreter (`isa.run_program`)
+over the flattened slot axis — same encoded program, different data.
+
+Addressing follows `subarray.py`: word-lines `[0, n_rows)` are data rows
+plus x1..x8, `[n_rows, n_rows + 4)` are the four DCC word-lines.  All
+helpers are pure and jit-friendly; `pim/scheduler.py` builds on this
+layer to tile tensor-sized operands onto slots and account cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .isa import run_program
+from .subarray import N_XROWS, SubArray, make_subarray, row_words
+from .timing import DrimGeometry
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DrimDevice:
+    """Batched state of every computational sub-array in the device.
+
+    data: [chips, banks, subarrays, n_rows, words] uint32
+    dcc:  [chips, banks, subarrays, 2, words]      uint32
+    """
+
+    data: jax.Array
+    dcc: jax.Array
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def chips(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def banks(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def subarrays(self) -> int:
+        return self.data.shape[2]
+
+    @property
+    def n_slots(self) -> int:
+        """Total (chip, bank, subarray) slots = SIMD width in rows."""
+        return self.chips * self.banks * self.subarrays
+
+    @property
+    def n_rows(self) -> int:
+        return self.data.shape[3]
+
+    @property
+    def words(self) -> int:
+        return self.data.shape[4]
+
+    @property
+    def row_bits(self) -> int:
+        return self.words * 32
+
+    # -- word-line aliases (same layout in every slot) ---------------------
+    def wl_x(self, k: int) -> int:
+        return self.n_rows - N_XROWS + (k - 1)
+
+    def wl_dcc(self, k: int) -> int:
+        return self.n_rows + (k - 1)
+
+    def slot(self, chip: int, bank: int, sub: int) -> SubArray:
+        """View one slot as a plain SubArray (for single-lane debugging)."""
+        return SubArray(data=self.data[chip, bank, sub],
+                        dcc=self.dcc[chip, bank, sub])
+
+
+def make_device(geom: Optional[DrimGeometry] = None, *,
+                chips: int = 2, banks: int = 4, subarrays: int = 8,
+                n_data: int = 16, row_bits: int = 256) -> DrimDevice:
+    """Fresh all-zero device.  `geom` overrides chips/banks/subarrays and
+    row_bits; `n_data` stays a knob so tests/schedulers can keep the
+    per-slot row count (and simulation memory) small."""
+    if geom is not None:
+        chips, banks, subarrays = geom.chips, geom.banks, geom.subarrays_per_bank
+        row_bits = geom.row_bits
+    w = row_words(row_bits)
+    lead = (chips, banks, subarrays)
+    return DrimDevice(
+        data=jnp.zeros(lead + (n_data + N_XROWS, w), jnp.uint32),
+        dcc=jnp.zeros(lead + (2, w), jnp.uint32),
+    )
+
+
+def device_template(dev: DrimDevice) -> SubArray:
+    """Zero SubArray with this device's per-slot shape — used to resolve
+    x/dcc word-line aliases when building microprograms."""
+    return make_subarray(n_data=dev.n_rows - N_XROWS, row_bits=dev.row_bits)
+
+
+def device_load_rows(dev: DrimDevice, start: int, rows: jax.Array) -> DrimDevice:
+    """Load per-slot row blocks: rows [chips, banks, subarrays, k, words]
+    are written to word-lines [start, start+k) of every slot (the DDR
+    write path, not an AAP)."""
+    rows = jnp.asarray(rows, jnp.uint32)
+    data = jax.lax.dynamic_update_slice(dev.data, rows, (0, 0, 0, start, 0))
+    return dataclasses.replace(dev, data=data)
+
+
+def device_broadcast_rows(dev: DrimDevice, start: int,
+                          rows: jax.Array) -> DrimDevice:
+    """Write the same [k, words] block into every slot at `start`."""
+    rows = jnp.asarray(rows, jnp.uint32)
+    tiled = jnp.broadcast_to(rows, dev.data.shape[:3] + rows.shape)
+    return device_load_rows(dev, start, tiled)
+
+
+def device_read_row(dev: DrimDevice, wl: int) -> jax.Array:
+    """Read word-line `wl` of every slot -> [chips, banks, subarrays, words]."""
+    return dev.data[:, :, :, wl, :]
+
+
+def device_run_program(dev: DrimDevice, encoded: jax.Array) -> DrimDevice:
+    """Execute one encoded [n, 5] AAP stream on EVERY slot at once.
+
+    One `jax.vmap` over the flattened slot axis of the `lax.scan`
+    interpreter — the SIMD lock-step of paper §3.4.  jit-friendly; the
+    scheduler jits this together with its operand loads.
+    """
+    lead = dev.data.shape[:3]
+    flat = SubArray(
+        data=dev.data.reshape((-1,) + dev.data.shape[3:]),
+        dcc=dev.dcc.reshape((-1,) + dev.dcc.shape[3:]),
+    )
+    out = jax.vmap(run_program, in_axes=(0, None))(flat, encoded)
+    return DrimDevice(
+        data=out.data.reshape(lead + out.data.shape[1:]),
+        dcc=out.dcc.reshape(lead + out.dcc.shape[1:]),
+    )

@@ -35,10 +35,16 @@ class DrimGeometry:
     subarrays_per_bank: int = 1024
     row_bits: int = 256          # 512 rows x 256 bit-lines (paper §3.4)
     t_aap_s: float = T_AAP_S
+    chips: int = 1               # rank/DIMM scale-out; all chips lock-step
+
+    @property
+    def n_subarrays(self) -> int:
+        """Concurrently computing sub-arrays across the whole device."""
+        return self.chips * self.banks * self.subarrays_per_bank
 
     @property
     def parallel_bits(self) -> int:
-        return self.banks * self.subarrays_per_bank * self.row_bits
+        return self.n_subarrays * self.row_bits
 
 
 # DRIM-R: regular DDR4-class chip.  DRIM-S: 3D-stacked, 256 banks in 4 GB

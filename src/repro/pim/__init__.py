@@ -1,0 +1,7 @@
+"""Processing-in-memory layer: bulk-op scheduling over the simulated
+DRIM fleet (`scheduler`) and the DRIM-vs-TPU placement planner
+(`offload`)."""
+from .scheduler import (OP_ARITY, REF_OP, RESULT_ROWS, Schedule,
+                        build_program, execute, execute_oplist,
+                        expected_results, plan_schedule, random_operands)
+from .offload import OffloadReport, plan, plan_model_payloads

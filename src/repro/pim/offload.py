@@ -1,13 +1,22 @@
 """PIM offload planner: price bulk bit-wise tensor ops on DRIM vs TPU.
 
 Given a tensor op (xnor / maj3 / add / not over bit-packed operands), the
-planner lowers it to an AAP command stream over DRIM sub-arrays (rows =
-256 bits) and reports latency/energy under the paper's timing/energy
-models, next to the TPU roofline cost of executing the same op on-chip
-(VPU bitwise, HBM-bandwidth bound).  This is the codesign analysis a
-deployment would run to decide what to push into the memory fleet:
-candidates are the framework's own bulk-bitwise consumers — BitLinear
-weight/activation sign planes and 1-bit EF gradient payloads.
+planner schedules it onto the DRIM fleet via `pim.scheduler` — tiling the
+operand into 256-bit rows, assigning tiles to (chip, bank, subarray)
+slots, and costing the resulting wave sequence with the paper's
+timing/energy models — and reports that next to the TPU roofline cost of
+executing the same op on-chip (VPU bitwise, HBM-bandwidth bound).  With
+`simulate=True` the AAP streams are actually executed on the functional
+`DrimDevice` simulator (random operand data) and the report carries the
+measured schedule; otherwise `plan_schedule()` computes the identical
+numbers in closed form, which is what makes billion-bit payloads
+plannable.  Either way the report now includes the parallelism breakdown
+(tiles / waves / active sub-arrays / occupancy) behind the latency.
+
+This is the codesign analysis a deployment would run to decide what to
+push into the memory fleet: candidates are the framework's own
+bulk-bitwise consumers — BitLinear weight/activation sign planes and
+1-bit EF gradient payloads.
 
 Verdict logic: bulk bit-ops are BANDWIDTH-bound on the TPU (arithmetic
 intensity ~0.1 flop/byte), so DRIM wins whenever operands already live in
@@ -20,15 +29,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Literal
 
-from repro.core import AAP_COUNTS, DRIM_R, DrimGeometry
-from repro.core.energy import E_ACCESS_NJ_PER_KB, E_IO_NJ_PER_KB, \
-    pim_energy_nj_per_kb
+from repro.core import DRIM_R, DrimGeometry
+from repro.core.energy import E_ACCESS_NJ_PER_KB, E_IO_NJ_PER_KB
+from repro.core.subarray import WORD_BITS
+from repro.pim.scheduler import Schedule, execute, plan_schedule
 
 # TPU v5e roofline constants (brief §Roofline)
 TPU_HBM_BW = 819e9          # bytes/s
 TPU_VPU_BITOPS = 4 * 8 * 128 * 940e6 * 32  # lanes x clock x bits: ~1.2e15
 
 OpName = Literal["xnor2", "xor2", "not", "maj3", "add", "copy"]
+
+# Payloads above this are priced from the closed-form schedule even when
+# simulation is requested — executing them row-by-row would be pointless
+# (the schedule math is exactly what execution measures).
+SIMULATE_MAX_BITS = 1 << 21
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,11 +52,18 @@ class OffloadReport:
     n_bits: int
     drim_latency_s: float
     drim_energy_j: float
-    drim_aaps: int
+    drim_aaps: int              # serialized AAP cycles (waves x per-tile)
     tpu_latency_s: float
     tpu_energy_j: float
     winner: str
     speedup: float
+    # parallelism breakdown (tentpole: measured from the schedule)
+    tiles: int = 0
+    waves: int = 0
+    active_subarrays: int = 0   # slots busy in the fullest wave
+    occupancy: float = 0.0      # tiles / (waves x slots)
+    aaps_issued: int = 0        # total AAPs across active sub-arrays
+    simulated: bool = False     # True when the streams actually ran
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -53,14 +75,26 @@ _BYTES_MOVED = {"not": 2, "xnor2": 3, "xor2": 3, "maj3": 4, "add": 5,
 _TPU_PJ_PER_BYTE = 1.3
 
 
+def _simulate_schedule(op: str, n_bits: int, geom: DrimGeometry) -> Schedule:
+    """Execute the op on the functional fleet with random operands and
+    return the measured schedule (cost-identical to `plan_schedule`, but
+    the AAP streams really ran)."""
+    from repro.pim.scheduler import random_operands
+    n_words = -(-n_bits // WORD_BITS)
+    args = random_operands(op, n_words, seed=n_bits & 0xFFFF)
+    _, sched = execute(op, *args, geom=geom, n_bits=n_bits)
+    return sched
+
+
 def plan(op: OpName, n_bits: int, *, geom: DrimGeometry = DRIM_R,
-         operands_in_dram: bool = True) -> OffloadReport:
-    aap_count = AAP_COUNTS.get(op, AAP_COUNTS["copy"])
-    waves = -(-n_bits // geom.parallel_bits)
-    drim_lat = waves * aap_count * geom.t_aap_s
+         operands_in_dram: bool = True,
+         simulate: bool = False) -> OffloadReport:
+    simulated = simulate and n_bits <= SIMULATE_MAX_BITS
+    sched = (_simulate_schedule(op, n_bits, geom) if simulated
+             else plan_schedule(op, n_bits, geom=geom))
+    drim_lat = sched.latency_s
+    drim_e = sched.energy_j
     kb = n_bits / 8.0 / 1024.0
-    drim_e = pim_energy_nj_per_kb(
-        "DRIM", op if op in ("not", "xnor2", "add") else "xnor2") * kb * 1e-9
 
     moved_bytes = _BYTES_MOVED[op] * n_bits / 8.0
     tpu_lat = max(moved_bytes / TPU_HBM_BW, n_bits / TPU_VPU_BITOPS)
@@ -73,10 +107,15 @@ def plan(op: OpName, n_bits: int, *, geom: DrimGeometry = DRIM_R,
     winner = "DRIM" if drim_lat < tpu_lat else "TPU"
     return OffloadReport(op=op, n_bits=n_bits, drim_latency_s=drim_lat,
                          drim_energy_j=drim_e,
-                         drim_aaps=waves * aap_count,
+                         drim_aaps=sched.aaps_sequential,
                          tpu_latency_s=tpu_lat, tpu_energy_j=tpu_e,
                          winner=winner,
-                         speedup=tpu_lat / max(drim_lat, 1e-30))
+                         speedup=tpu_lat / max(drim_lat, 1e-30),
+                         tiles=sched.tiles, waves=sched.waves,
+                         active_subarrays=sched.active_subarrays,
+                         occupancy=sched.occupancy,
+                         aaps_issued=sched.aaps_issued,
+                         simulated=simulated)
 
 
 def plan_model_payloads(cfg) -> Dict[str, OffloadReport]:

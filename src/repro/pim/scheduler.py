@@ -1,0 +1,258 @@
+"""Bulk-op scheduler: map tensor-sized bit-wise ops onto a DrimDevice.
+
+Takes a tensor-level op (xnor2 / xor2 / not / maj3 / add / copy over
+bit-packed uint32 operands of arbitrary size), tiles the operands into
+`row_bits`-wide rows, assigns tiles to (chip, bank, subarray) slots, and
+executes the batched AAP command stream wave by wave on the functional
+`DrimDevice` simulator — one vmapped `lax.scan` per wave, every active
+sub-array running the same Table-2 microprogram in lock-step.
+
+Cost accounting is *measured from the executed stream*, not a separate
+closed form: `aaps_per_tile` is the length of the encoded program each
+slot runs, latency is `waves x aaps_per_tile x t_AAP` (waves are the only
+serialization; slots within a wave are concurrent, paper §3.4), and
+energy charges `E_AAP` per KB of activated row per AAP for the assigned
+tiles (idle slots are not activated by the Modified Row Decoder, so
+padding slots draw nothing).  `pim/offload.py` prices placements from
+these schedules; `benchmarks/fig8_throughput.py --simulate` sweeps
+parallelism through `execute()` and checks the analytic model against it.
+
+Semantics per op (results read back from the Table-2 destination rows):
+    copy  (a)       -> a
+    not   (a)       -> ~a
+    xnor2 (a, b)    -> ~(a ^ b)
+    xor2  (a, b)    -> a ^ b
+    maj3  (a, b, c) -> majority
+    add   (a, b, c) -> (a ^ b ^ c, majority)   # full-adder bit-slice
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AAP, DRIM_R, DrimGeometry, cost, encode,
+                        make_subarray, microprogram_add, microprogram_copy,
+                        microprogram_maj3, microprogram_not,
+                        microprogram_xnor2, microprogram_xor2)
+from repro.core.device import (DrimDevice, device_run_program, make_device)
+from repro.core.energy import E_AAP_NJ_PER_KB
+from repro.core.subarray import WORD_BITS
+
+# Per-slot row layout: operands at word-lines [0, arity), results at the
+# word-lines listed here.  8 data rows are plenty for every Table-2 op.
+N_DATA_ROWS = 8
+
+OP_ARITY: Dict[str, int] = {
+    "copy": 1, "not": 1, "xnor2": 2, "xor2": 2, "maj3": 3, "add": 3,
+}
+RESULT_ROWS: Dict[str, Tuple[int, ...]] = {
+    "copy": (1,), "not": (1,), "xnor2": (2,), "xor2": (2,),
+    "maj3": (3,), "add": (3, 4),
+}
+# `kernels/ref.py` oracle name per bulk op (None -> identity); single
+# source of truth for benchmarks/tests that cross-check results.
+REF_OP: Dict[str, str | None] = {
+    "copy": None, "not": "not", "xnor2": "xnor", "xor2": "xor",
+    "maj3": "maj3", "add": "fa",
+}
+
+
+def random_operands(op: str, n_words: int, seed: int = 0) -> List:
+    """Seeded uint32 word arrays with the right arity for `op` — shared
+    by benchmarks/tests/offload so cross-check recipes cannot drift."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+            for _ in range(OP_ARITY[op])]
+
+
+def expected_results(op: str, args: Sequence) -> Tuple:
+    """Oracle results for `op` via `kernels/ref.py`, normalized to a
+    tuple aligned with RESULT_ROWS[op]."""
+    from repro.kernels.ref import bitwise_ref
+    if REF_OP[op] is None:
+        return (args[0],)
+    padded = tuple(args) + (None,) * (3 - len(args))
+    out = bitwise_ref(REF_OP[op], *padded)
+    return out if isinstance(out, tuple) else (out,)
+
+_PROGRAM_CACHE: Dict[str, List[AAP]] = {}
+
+
+def build_program(op: str) -> List[AAP]:
+    """Table-2 microprogram for `op` over the scheduler's row layout
+    (operands at rows 0..arity-1, results at RESULT_ROWS[op])."""
+    if op not in OP_ARITY:
+        raise ValueError(f"unknown bulk op {op!r}")
+    if op not in _PROGRAM_CACHE:
+        t = make_subarray(n_data=N_DATA_ROWS, row_bits=WORD_BITS)
+        _PROGRAM_CACHE[op] = {
+            "copy": lambda: microprogram_copy(t, 0, 1),
+            "not": lambda: microprogram_not(t, 0, 1),
+            "xnor2": lambda: microprogram_xnor2(t, 0, 1, 2),
+            "xor2": lambda: microprogram_xor2(t, 0, 1, 2),
+            "maj3": lambda: microprogram_maj3(t, 0, 1, 2, 3),
+            "add": lambda: microprogram_add(t, 0, 1, 2, 3, 4),
+        }[op]()
+    return _PROGRAM_CACHE[op]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Tiling + wave plan for one bulk op, with measured cost model.
+
+    `tiles` counts only assigned tiles (the ragged tail is padded to a
+    full row but idle slots in the last wave are never activated).
+    """
+
+    op: str
+    n_bits: int
+    row_bits: int
+    tiles: int
+    slots: int             # concurrent (chip, bank, subarray) lanes
+    waves: int
+    aaps_per_tile: int     # length of the executed AAP stream per slot
+    chips: int
+    banks: int
+    subarrays_per_bank: int
+    t_aap_s: float
+
+    @property
+    def aaps_sequential(self) -> int:
+        """Serialized AAP cycles on the command bus (waves back-to-back)."""
+        return self.waves * self.aaps_per_tile
+
+    @property
+    def aaps_issued(self) -> int:
+        """Total AAPs executed across all active sub-arrays."""
+        return self.tiles * self.aaps_per_tile
+
+    @property
+    def latency_s(self) -> float:
+        return self.aaps_sequential * self.t_aap_s
+
+    @property
+    def energy_j(self) -> float:
+        row_kb = self.row_bits / 8.0 / 1024.0
+        return self.aaps_issued * row_kb * E_AAP_NJ_PER_KB * 1e-9
+
+    @property
+    def active_subarrays(self) -> int:
+        """Slots busy in the fullest wave."""
+        return min(self.tiles, self.slots)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of wave x slot capacity holding real tiles."""
+        return self.tiles / float(self.waves * self.slots)
+
+    @property
+    def throughput_bits_s(self) -> float:
+        return self.n_bits / self.latency_s
+
+    def parallelism_breakdown(self) -> Dict[str, float]:
+        return {
+            "chips": self.chips,
+            "banks": self.banks,
+            "subarrays_per_bank": self.subarrays_per_bank,
+            "slots": self.slots,
+            "tiles": self.tiles,
+            "waves": self.waves,
+            "active_subarrays": self.active_subarrays,
+            "occupancy": self.occupancy,
+        }
+
+
+def plan_schedule(op: str, n_bits: int, *,
+                  geom: DrimGeometry = DRIM_R) -> Schedule:
+    """Closed-form schedule for an `n_bits` bulk op — identical numbers to
+    what `execute()` measures (same tiling, same program length)."""
+    if n_bits <= 0:
+        raise ValueError("n_bits must be positive")
+    prog = build_program(op)
+    tiles = _ceil_div(n_bits, geom.row_bits)
+    slots = geom.n_subarrays
+    return Schedule(
+        op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
+        slots=slots, waves=_ceil_div(tiles, slots),
+        aaps_per_tile=cost(prog)[0], chips=geom.chips, banks=geom.banks,
+        subarrays_per_bank=geom.subarrays_per_bank, t_aap_s=geom.t_aap_s,
+    )
+
+
+@jax.jit
+def _load_and_run(dev: DrimDevice, tiles: jax.Array,
+                  encoded: jax.Array) -> DrimDevice:
+    """One wave: write operand k's tiles into word-line k of every slot,
+    then run the encoded stream on the whole stack (single vmapped scan)."""
+    data = dev.data
+    for k in range(tiles.shape[0]):
+        data = data.at[:, :, :, k, :].set(tiles[k])
+    return device_run_program(
+        DrimDevice(data=data, dcc=dev.dcc), encoded)
+
+
+def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
+            n_bits: int | None = None,
+            ) -> Tuple[Tuple[jax.Array, ...], Schedule]:
+    """Run a bulk op through the simulated device fleet.
+
+    operands: flat uint32 word arrays, all the same length W (bit-packed,
+    LSB of word 0 first).  `n_bits` defaults to W x 32; a smaller value
+    marks a ragged bit tail (the tail is still computed, the cost model
+    tiles by words either way).  Returns one result array per
+    RESULT_ROWS[op] entry, each of length W, plus the measured Schedule.
+    """
+    arity = OP_ARITY.get(op)
+    if arity is None:
+        raise ValueError(f"unknown bulk op {op!r}")
+    if len(operands) != arity:
+        raise ValueError(f"{op} takes {arity} operands, got {len(operands)}")
+    ops = [jnp.asarray(x, jnp.uint32).reshape(-1) for x in operands]
+    n_words = ops[0].shape[0]
+    if any(o.shape[0] != n_words for o in ops):
+        raise ValueError("operands must have equal length")
+    if n_bits is None:
+        n_bits = n_words * WORD_BITS
+    if not 0 < n_bits <= n_words * WORD_BITS:
+        raise ValueError("n_bits out of range for the given operands")
+
+    row_w = geom.row_bits // WORD_BITS
+    tiles = _ceil_div(n_words, row_w)
+    slots = geom.n_subarrays
+    waves = _ceil_div(tiles, slots)
+    pad = waves * slots * row_w - n_words
+    lead = (waves, geom.chips, geom.banks, geom.subarrays_per_bank, row_w)
+    staged = jnp.stack([jnp.pad(o, (0, pad)).reshape(lead) for o in ops])
+
+    dev0 = make_device(geom, n_data=N_DATA_ROWS)
+    enc = encode(build_program(op))
+    chunks: List[List[jax.Array]] = [[] for _ in RESULT_ROWS[op]]
+    for w in range(waves):
+        out = _load_and_run(dev0, staged[:, w], enc)
+        for i, r in enumerate(RESULT_ROWS[op]):
+            chunks[i].append(out.data[:, :, :, r, :].reshape(-1))
+    results = tuple(jnp.concatenate(c)[:n_words] for c in chunks)
+
+    sched = Schedule(
+        op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
+        slots=slots, waves=waves, aaps_per_tile=int(enc.shape[0]),
+        chips=geom.chips, banks=geom.banks,
+        subarrays_per_bank=geom.subarrays_per_bank, t_aap_s=geom.t_aap_s,
+    )
+    return results, sched
+
+
+def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
+                   geom: DrimGeometry = DRIM_R,
+                   ) -> List[Tuple[Tuple[jax.Array, ...], Schedule]]:
+    """Convenience: run an op list [(op, operands), ...] back-to-back on
+    the same fleet; total latency/energy is the sum over schedules."""
+    return [execute(op, *args, geom=geom) for op, args in ops]

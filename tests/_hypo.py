@@ -1,0 +1,59 @@
+"""Thin `hypothesis` compatibility layer for the tier-1 suite.
+
+Uses the real package when installed (`pip install -r
+requirements-dev.txt`); otherwise provides a deterministic fallback that
+draws seeded pseudo-random examples, so the property tests still collect
+AND run on bare images.  Only the subset the suite uses is implemented:
+`given`, `settings(max_examples=, deadline=)`, and
+`st.integers/floats/lists`.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(
+                rng.integers(min_value, max_value, endpoint=True)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(
+                rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size, endpoint=True))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def given(*strats):
+        def deco(fn):
+            def runner():
+                for i in range(getattr(runner, "_max_examples", 10)):
+                    rng = _np.random.default_rng(0xD81 + i)
+                    fn(*(s.draw(rng) for s in strats))
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner._max_examples = 10
+            return runner
+        return deco
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

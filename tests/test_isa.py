@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core import (AAP, AAP_COUNTS, cost, encode, load_rows,
                         make_subarray, microprogram_add, microprogram_copy,

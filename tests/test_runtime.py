@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.data.pipeline import (MemmapLM, Prefetcher, SyntheticLM,
@@ -207,6 +207,7 @@ def test_param_rules_family_ssm_replicated():
 
 
 def test_zero1_spec_adds_data_axis():
-    mesh = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    # jax 0.4.x AbstractMesh takes ((name, size), ...) pairs
+    mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 1)))
     out = shd.zero1_spec(P(None, "model"), (8, 4), mesh)
     assert out == P("data", "model")

@@ -1,0 +1,142 @@
+"""Bulk-op scheduler tests: ragged round-trips, AAP accounting vs
+`isa.cost()`, offload delegation, and the Fig. 8 parallelism invariant
+(throughput linear in active sub-arrays until the work runs out).
+"""
+import numpy as np
+import pytest
+from _hypo import given, settings, st  # hypothesis, or seeded fallback
+
+from repro.core import AAP_COUNTS, DRIM_R, DrimGeometry, cost, \
+    drim_latency_s
+from repro.pim import (OP_ARITY, build_program, execute, execute_oplist,
+                       expected_results, plan, plan_schedule,
+                       random_operands)
+
+
+@pytest.mark.parametrize("op", sorted(OP_ARITY))
+def test_roundtrip_all_ops(op, small_geom):
+    """Every op round-trips through the simulated fleet bit-for-bit."""
+    args = random_operands(op, 37, seed=sum(map(ord, op)))  # ragged: 37
+    results, sched = execute(op, *args, geom=small_geom)
+    for got, want in zip(results, expected_results(op, args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert sched.aaps_per_tile == cost(build_program(op))[0]
+
+
+def test_ragged_sizes_and_tail_bits(small_geom, n_examples):
+    """Arbitrary operand sizes: non-multiples of the row, bigger than the
+    fleet (multi-wave), and a ragged bit tail (n_bits < words x 32)."""
+    row_w = small_geom.row_bits // 32
+    slots = small_geom.n_subarrays
+    sizes = [1, row_w - 1, row_w + 1, 3 * row_w,
+             slots * row_w + 5, 2 * slots * row_w + 1][:max(4, n_examples)]
+    for i, n_words in enumerate(sizes):
+        a, b = random_operands("xnor2", n_words, seed=i)
+        n_bits = n_words * 32 - 13  # ragged bit tail
+        (res,), sched = execute("xnor2", a, b, geom=small_geom,
+                                n_bits=n_bits)
+        assert res.shape == (n_words,)
+        np.testing.assert_array_equal(np.asarray(res), ~(a ^ b))
+        assert sched.tiles == -(-n_words // row_w)
+        assert sched.waves == -(-sched.tiles // slots)
+        assert sched.n_bits == n_bits
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 200))
+def test_property_roundtrip_arbitrary_words(n_words):
+    geom = DrimGeometry(chips=1, banks=2, subarrays_per_bank=4, row_bits=64)
+    a, b, c = random_operands("add", n_words, seed=n_words)
+    (s, co), sched = execute("add", a, b, c, geom=geom)
+    np.testing.assert_array_equal(np.asarray(s), a ^ b ^ c)
+    np.testing.assert_array_equal(np.asarray(co),
+                                  (a & b) | (a & c) | (b & c))
+    assert sched.tiles == -(-n_words // 2)
+
+
+def test_aap_counts_equal_isa_cost_times_tiles(small_geom):
+    """Satellite acceptance: reported AAPs == isa.cost() x tiles, and the
+    per-tile counts match the paper's Table-2 canon."""
+    for op in sorted(OP_ARITY):
+        sched = plan_schedule(op, 10_000, geom=small_geom)
+        n_aap, _ = cost(build_program(op))
+        assert sched.aaps_per_tile == n_aap
+        assert sched.aaps_issued == n_aap * sched.tiles
+        assert sched.aaps_sequential == n_aap * sched.waves
+        if op in AAP_COUNTS:
+            assert n_aap == AAP_COUNTS[op]
+
+
+def test_throughput_linear_until_work_limit():
+    """Fig. 8 invariant: throughput scales linearly with active
+    sub-arrays while there is a full wave of work, then saturates once
+    the fleet outsizes the tile count (extra banks sit idle)."""
+    row = 256
+    n_bits = 32 * row  # 32 tiles of work
+    thpt = {}
+    for subs in (1, 2, 4, 8):
+        geom = DrimGeometry(chips=1, banks=4, subarrays_per_bank=subs,
+                            row_bits=row)
+        thpt[subs] = plan_schedule("xnor2", n_bits, geom=geom) \
+            .throughput_bits_s
+    for lo, hi in ((1, 2), (2, 4), (4, 8)):
+        assert thpt[hi] == pytest.approx(thpt[lo] * 2), (lo, hi)
+    # 32 tiles on 32 slots already finish in one wave: doubling the
+    # fleet again cannot help
+    over = DrimGeometry(chips=1, banks=8, subarrays_per_bank=8,
+                        row_bits=row)
+    assert plan_schedule("xnor2", n_bits, geom=over).throughput_bits_s \
+        == pytest.approx(thpt[8])
+    sched = plan_schedule("xnor2", n_bits, geom=over)
+    assert sched.active_subarrays == sched.tiles == 32
+    assert sched.occupancy == pytest.approx(0.5)
+
+
+def test_offload_plan_delegates_to_schedule():
+    """`offload.plan()` numbers come from the schedule and equal the
+    legacy analytic model where they overlapped."""
+    n_bits = 2**20
+    rep = plan("xnor2", n_bits)
+    assert rep.drim_latency_s == pytest.approx(
+        drim_latency_s(DRIM_R, "xnor2", n_bits))
+    assert rep.waves == 1 and rep.tiles == n_bits // 256
+    assert rep.aaps_issued == 3 * rep.tiles
+    assert not rep.simulated
+
+
+def test_offload_plan_simulate_matches_analytic(small_geom):
+    """Measured-from-execution report within 5% of the closed form
+    (tentpole acceptance; here it is exact by construction)."""
+    n_bits = 4 * small_geom.parallel_bits
+    ana = plan("xnor2", n_bits, geom=small_geom)
+    sim = plan("xnor2", n_bits, geom=small_geom, simulate=True)
+    assert sim.simulated
+    assert sim.drim_latency_s == pytest.approx(ana.drim_latency_s,
+                                               rel=0.05)
+    assert sim.drim_energy_j == pytest.approx(ana.drim_energy_j, rel=0.05)
+    assert (sim.tiles, sim.waves) == (ana.tiles, ana.waves)
+
+
+def test_execute_oplist_sums(small_geom):
+    a, b, c = random_operands("maj3", 8, seed=3)
+    out = execute_oplist([("xnor2", (a, b)), ("maj3", (a, b, c))],
+                         geom=small_geom)
+    assert len(out) == 2
+    (xn,), s1 = out[0]
+    (mj,), s2 = out[1]
+    np.testing.assert_array_equal(np.asarray(xn), ~(a ^ b))
+    np.testing.assert_array_equal(np.asarray(mj),
+                                  (a & b) | (a & c) | (b & c))
+    assert s1.aaps_per_tile == 3 and s2.aaps_per_tile == 4
+
+
+def test_execute_validates_inputs(small_geom):
+    a, b = random_operands("xnor2", 4, seed=1)
+    with pytest.raises(ValueError):
+        execute("xnor2", a, geom=small_geom)       # wrong arity
+    with pytest.raises(ValueError):
+        execute("nand", a, b, geom=small_geom)      # unknown op
+    with pytest.raises(ValueError):
+        execute("xnor2", a, b[:2], geom=small_geom)  # length mismatch
+    with pytest.raises(ValueError):
+        execute("xnor2", a, b, geom=small_geom, n_bits=4 * 32 + 1)
