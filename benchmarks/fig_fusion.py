@@ -1,0 +1,103 @@
+"""Fusion figure: fused dataflow graphs vs the unfused op-at-a-time path.
+
+Sweeps the BNN XNOR -> popcount-accumulate dot-product graph
+(`pim/bnn.py`) over K (the binarized reduction depth) on the DRIM-R
+geometry and reports, per K: AAP cycles per tile fused vs unfused, DDR
+row movements, latency, total energy (AAP + DDR row movement), and the
+resulting speedup / energy ratio.  The fused program keeps all
+intermediates resident in sub-array data rows, so the unfused column
+pays both extra AAPs (no destructive-read elision) and the full host
+round trip per op — the operand-locality win of paper §1.
+
+A final section executes a small instance on the functional simulator:
+results are checked bit-exact against `kernels/ref.py:xnor_gemm_ref`,
+and the measured schedule must agree with the closed form and report
+strictly fewer AAPs and DDR rows than the equivalent `execute_oplist`
+chain (the PR's acceptance assertion, run as part of the benchmark).
+
+    PYTHONPATH=src python -m benchmarks.fig_fusion
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DRIM_R, DrimGeometry
+from repro.kernels.ref import pack_signs_ref, xnor_gemm_ref
+from repro.pim.bnn import bnn_dot_drim, bnn_dot_graph
+from repro.pim.graph import plan_graph_schedule
+
+K_SWEEP = (8, 16, 32, 64, 128)
+N_BITS = 2 ** 27        # one Fig.-8-scale bulk payload per plane set
+
+# Simulated check point: small fleet, ragged lanes, multi-wave.
+SIM_M, SIM_N, SIM_K = 6, 7, 12
+SIM_GEOM = DrimGeometry(chips=1, banks=2, subarrays_per_bank=2,
+                        row_bits=32)
+
+
+def sweep(ks=K_SWEEP, n_bits=N_BITS, geom=DRIM_R):
+    """[(k, fused_sched), ...] closed-form fused schedules per K."""
+    return [(k, plan_graph_schedule(bnn_dot_graph(k), n_bits, geom=geom))
+            for k in ks]
+
+
+def simulated_check(m=SIM_M, n=SIM_N, k=SIM_K, geom=SIM_GEOM):
+    """Run the fused BNN dot-product on the simulator, verify bit-exact
+    vs the reference GEMM, and assert the fusion acceptance criteria."""
+    rng = np.random.default_rng(0xB17)
+    a_bits = rng.integers(0, 2, (m, k)).astype(np.uint8)
+    b_bits = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    c, sched = bnn_dot_drim(a_bits, b_bits, geom=geom)
+
+    w32 = -(-k // 32) * 32
+    ap = np.full((m, w32), -1.0, np.float32)
+    ap[:, :k] = np.where(a_bits, 1.0, -1.0)
+    bp = np.full((n, w32), -1.0, np.float32)
+    bp[:, :k] = np.where(b_bits, 1.0, -1.0)
+    ref = np.asarray(xnor_gemm_ref(pack_signs_ref(ap), pack_signs_ref(bp),
+                                   k))
+    np.testing.assert_array_equal(c, ref)
+
+    plan = plan_graph_schedule(bnn_dot_graph(k), m * n, geom=geom)
+    assert plan.aaps_per_tile == sched.aaps_per_tile
+    assert plan.waves == sched.waves
+    assert sched.aaps_sequential < sched.unfused_aaps_sequential
+    assert sched.ddr_rows_moved < sched.unfused_ddr_rows_moved
+    return sched
+
+
+def run(csv_rows):
+    t0 = time.time()
+    rows = sweep()
+    sim = simulated_check()
+    us = (time.time() - t0) * 1e6
+
+    print("\n-- fused BNN dot-product graph vs unfused execute_oplist "
+          "chain (DRIM-R, 2^27-bit planes) --")
+    print(f"{'K':>4}{'nodes':>7}{'rows':>6}{'AAP/tile':>10}"
+          f"{'unfused':>9}{'DDR rows':>12}{'unfused':>12}"
+          f"{'latency':>11}{'speedup':>9}{'energy x':>9}")
+    for k, s in rows:
+        print(f"{k:>4}{s.n_nodes:>7}{s.rows_used:>6}"
+              f"{s.aaps_per_tile:>10}{s.unfused_aaps_per_tile:>9}"
+              f"{s.ddr_rows_moved:>12.2e}{s.unfused_ddr_rows_moved:>12.2e}"
+              f"{s.latency_s * 1e3:>9.2f}ms"
+              f"{s.speedup_vs_unfused:>9.3f}"
+              f"{s.unfused_total_energy_j / s.total_energy_j:>9.2f}")
+
+    print("\n-- simulated check (fused program executed on the fleet) --")
+    print(f"{SIM_M}x{SIM_N} dot products, K={SIM_K}: bit-exact vs "
+          f"kernels/ref.py; {sim.aaps_sequential} fused AAP cycles vs "
+          f"{sim.unfused_aaps_sequential} unfused, {sim.ddr_rows_moved} "
+          f"DDR rows vs {sim.unfused_ddr_rows_moved} "
+          f"({sim.waves} wave(s), {sim.rows_used} rows/slot)")
+
+    worst = min(s.speedup_vs_unfused for _, s in rows)
+    csv_rows.append(("fig_fusion", us, f"min_fused_speedup={worst:.3f}"))
+    return rows, sim
+
+
+if __name__ == "__main__":
+    run([])

@@ -5,6 +5,7 @@
 Runs:
     fig8_throughput     Fig. 8  — bulk bit-wise throughput, 8 platforms
     fig9_energy         Fig. 9  — DRAM chip energy per KB
+    fig_fusion          fusion  — fused graphs vs unfused op chains
     table3_reliability  Table 3 — Monte-Carlo process-variation error
     roofline            brief   — 3-term roofline from the dry-run
 
@@ -15,12 +16,13 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fig8_throughput, fig9_energy, table3_reliability,
-                        roofline)
+from benchmarks import (fig8_throughput, fig9_energy, fig_fusion,
+                        table3_reliability, roofline)
 
 MODULES = (
     ("fig8_throughput", fig8_throughput),
     ("fig9_energy", fig9_energy),
+    ("fig_fusion", fig_fusion),
     ("table3_reliability", table3_reliability),
     ("roofline", roofline),
 )

@@ -16,10 +16,21 @@ so each row also shows the parallelism breakdown (waves x active
 sub-arrays).  The final section cross-checks the closed-form schedule
 against `simulate=True` — the same op actually executed on the
 functional `DrimDevice` fleet.
+
+The fused-graph section prices whole dataflow graphs (the BNN
+XNOR -> popcount-accumulate chain) compiled to ONE resident in-DRAM
+program (`pim/graph.py`) against the unfused op-at-a-time chain and the
+TPU — the scheduler-op-fusion win: intermediates never cross the DDR
+bus.
 """
+import numpy as np
+
 from repro.configs.registry import ARCHS
 from repro.configs import get_config
-from repro.pim.offload import plan, plan_model_payloads
+from repro.core import DrimGeometry
+from repro.kernels.ref import pack_signs_ref, xnor_gemm_ref
+from repro.pim.bnn import bnn_dot_drim, bnn_dot_graph
+from repro.pim.offload import plan, plan_fused, plan_model_payloads
 
 
 def main():
@@ -52,8 +63,45 @@ def main():
               f"active={sim.active_subarrays}, "
               f"occupancy={sim.occupancy:.0%})")
 
+    print("\n-- fused dataflow graphs: BNN XNOR->popcount-accumulate "
+          "(2^27-bit planes) --")
+    print(f"{'K':>4}{'nodes':>7}{'fused':>10}{'unfused':>10}{'TPU':>10}"
+          f"{'x unfused':>10}{'energy x':>9}  winner")
+    for k in (8, 32, 128):
+        rep = plan_fused(bnn_dot_graph(k), 2 ** 27)
+        print(f"{k:>4}{rep.n_nodes:>7}"
+              f"{rep.fused_latency_s * 1e3:>8.2f}ms"
+              f"{rep.unfused_latency_s * 1e3:>8.2f}ms"
+              f"{rep.tpu_latency_s * 1e3:>8.2f}ms"
+              f"{rep.speedup_vs_unfused:>10.3f}"
+              f"{rep.unfused_energy_j / rep.fused_energy_j:>9.2f}"
+              f"  {rep.winner}")
+
+    print("\n-- fused BNN dot-product executed on the simulated fleet --")
+    rng = np.random.default_rng(42)
+    m, n, k = 4, 5, 8
+    a_bits = rng.integers(0, 2, (m, k)).astype(np.uint8)
+    b_bits = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    geom = DrimGeometry(chips=1, banks=2, subarrays_per_bank=2,
+                        row_bits=32)
+    c, sched = bnn_dot_drim(a_bits, b_bits, geom=geom)
+    ap = np.where(a_bits, 1.0, -1.0).astype(np.float32)
+    bp = np.where(b_bits, 1.0, -1.0).astype(np.float32)
+    ref = np.asarray(xnor_gemm_ref(pack_signs_ref(np.pad(
+        ap, ((0, 0), (0, 32 - k)), constant_values=-1.0)),
+        pack_signs_ref(np.pad(bp, ((0, 0), (0, 32 - k)),
+                              constant_values=-1.0)), k))
+    exact = bool((c == ref).all())
+    print(f"{m}x{n} dot products, K={k}: bit-exact={exact}; "
+          f"{sched.aaps_sequential} fused AAP cycles vs "
+          f"{sched.unfused_aaps_sequential} unfused, "
+          f"{sched.ddr_rows_moved} DDR rows vs "
+          f"{sched.unfused_ddr_rows_moved}")
+
     print("\nVerdict: PIM wins when operands already live in DRAM and the"
-          "\nresult stays there; staging through the host erases the win.")
+          "\nresult stays there; staging through the host erases the win —"
+          "\nand fusing whole graphs keeps intermediates resident, so the"
+          "\nwin compounds with chain depth.")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,8 @@ from .isa import (AAP, OP_COPY, OP_COPY2, OP_DRA, OP_TRA, encode, cost,
                   microprogram_add, multibit_add_program)
 from .device import (DrimDevice, make_device, device_template,
                      device_load_rows, device_broadcast_rows,
-                     device_read_row, device_run_program)
+                     device_read_row, device_read_rows,
+                     device_read_row_window, device_run_program)
 from .analog import (AnalogParams, dra_analog, tra_analog,
                      monte_carlo_error_rates, PAPER_TABLE3)
 from .timing import (DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits,

@@ -127,6 +127,25 @@ def device_read_row(dev: DrimDevice, wl: int) -> jax.Array:
     return dev.data[:, :, :, wl, :]
 
 
+def device_read_rows(dev: DrimDevice, wls) -> jax.Array:
+    """Gather a window of word-lines from every slot.
+
+    wls: sequence of word-line numbers (need not be contiguous — the fused
+    graph executor reads back output rows wherever the row allocator left
+    them).  Returns [len(wls), chips, banks, subarrays, words] so the row
+    axis leads, matching the order results are handed back to the host.
+    """
+    idx = jnp.asarray(wls, jnp.int32)
+    return jnp.moveaxis(dev.data[:, :, :, idx, :], 3, 0)
+
+
+def device_read_row_window(dev: DrimDevice, start: int, k: int) -> jax.Array:
+    """Read the contiguous word-lines [start, start+k) of every slot ->
+    [k, chips, banks, subarrays, words] (the DDR read path, mirror of
+    `device_load_rows`)."""
+    return device_read_rows(dev, range(start, start + k))
+
+
 def device_run_program(dev: DrimDevice, encoded: jax.Array) -> DrimDevice:
     """Execute one encoded [n, 5] AAP stream on EVERY slot at once.
 

@@ -1,7 +1,15 @@
 """Processing-in-memory layer: bulk-op scheduling over the simulated
-DRIM fleet (`scheduler`) and the DRIM-vs-TPU placement planner
+DRIM fleet (`scheduler`), fused dataflow graphs with resident
+intermediates (`graph`, `bnn`), and the DRIM-vs-TPU placement planner
 (`offload`)."""
 from .scheduler import (OP_ARITY, REF_OP, RESULT_ROWS, Schedule,
                         build_program, execute, execute_oplist,
-                        expected_results, plan_schedule, random_operands)
-from .offload import OffloadReport, plan, plan_model_payloads
+                        expected_results, plan_schedule, random_operands,
+                        run_waves, stage_rows)
+from .graph import (BulkGraph, FusedProgram, FusedSchedule, ValueRef,
+                    compile_graph, execute_graph, graph_ref_results,
+                    plan_graph_schedule)
+from .bnn import (bnn_dot_drim, bnn_dot_graph, counter_bits,
+                  decode_counts, stage_bnn_planes)
+from .offload import (FusedOffloadReport, OffloadReport, plan, plan_fused,
+                      plan_model_payloads)

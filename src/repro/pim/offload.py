@@ -29,10 +29,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Literal
 
+import numpy as np
+
 from repro.core import DRIM_R, DrimGeometry
 from repro.core.energy import E_ACCESS_NJ_PER_KB, E_IO_NJ_PER_KB
 from repro.core.subarray import WORD_BITS
-from repro.pim.scheduler import Schedule, execute, plan_schedule
+from repro.pim.graph import (BulkGraph, FusedSchedule, execute_graph,
+                             plan_graph_schedule)
+from repro.pim.scheduler import OP_ARITY, Schedule, execute, plan_schedule
 
 # TPU v5e roofline constants (brief §Roofline)
 TPU_HBM_BW = 819e9          # bytes/s
@@ -89,6 +93,10 @@ def _simulate_schedule(op: str, n_bits: int, geom: DrimGeometry) -> Schedule:
 def plan(op: OpName, n_bits: int, *, geom: DrimGeometry = DRIM_R,
          operands_in_dram: bool = True,
          simulate: bool = False) -> OffloadReport:
+    if op not in OP_ARITY or op not in _BYTES_MOVED:
+        raise ValueError(f"unknown bulk op {op!r}")
+    if n_bits <= 0:
+        raise ValueError("n_bits must be positive")
     simulated = simulate and n_bits <= SIMULATE_MAX_BITS
     sched = (_simulate_schedule(op, n_bits, geom) if simulated
              else plan_schedule(op, n_bits, geom=geom))
@@ -116,6 +124,90 @@ def plan(op: OpName, n_bits: int, *, geom: DrimGeometry = DRIM_R,
                          occupancy=sched.occupancy,
                          aaps_issued=sched.aaps_issued,
                          simulated=simulated)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedOffloadReport:
+    """Placement verdict for a whole fused dataflow graph.
+
+    Three contenders: the fused in-DRAM program (intermediates resident
+    in data rows), the unfused `execute_oplist` chain (host round trip
+    per op), and the TPU running the same chain with intermediates held
+    in VMEM (only graph inputs/outputs cross HBM).
+    """
+
+    n_nodes: int
+    n_bits: int
+    fused_latency_s: float
+    fused_energy_j: float
+    fused_aaps: int                 # serialized cycles, waves x per-tile
+    unfused_latency_s: float
+    unfused_energy_j: float
+    unfused_aaps: int
+    ddr_rows_moved: int
+    unfused_ddr_rows_moved: int
+    tpu_latency_s: float
+    tpu_energy_j: float
+    winner: str
+    speedup_vs_unfused: float
+    speedup_vs_tpu: float
+    rows_used: int
+    waves: int
+    simulated: bool = False
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _simulate_graph(graph: BulkGraph, n_bits: int,
+                    geom: DrimGeometry) -> FusedSchedule:
+    """Execute the fused graph on the functional fleet with seeded
+    random feeds and return the measured schedule."""
+    n_words = -(-n_bits // WORD_BITS)
+    rng = np.random.default_rng(n_bits & 0xFFFF)
+    feeds = {name: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+             for name in graph.input_names}
+    _, sched = execute_graph(graph, feeds, geom=geom, n_bits=n_bits)
+    return sched
+
+
+def plan_fused(graph: BulkGraph, n_bits: int, *,
+               geom: DrimGeometry = DRIM_R,
+               simulate: bool = False) -> FusedOffloadReport:
+    """Price a fused graph vs its unfused chain and the TPU.
+
+    TPU model: intermediates stay in VMEM, so HBM traffic is the graph
+    boundary only (inputs + outputs x n_bits), with a VPU floor of one
+    bit-op per node per bit; energy charges DRAM access per byte moved.
+    """
+    simulated = simulate and n_bits <= SIMULATE_MAX_BITS
+    sched = (_simulate_graph(graph, n_bits, geom) if simulated
+             else plan_graph_schedule(graph, n_bits, geom=geom))
+
+    boundary_bytes = (sched.n_inputs + sched.n_outputs) * n_bits / 8.0
+    tpu_lat = max(boundary_bytes / TPU_HBM_BW,
+                  sched.n_nodes * n_bits / TPU_VPU_BITOPS)
+    tpu_e = boundary_bytes * _TPU_PJ_PER_BYTE * 1e-12
+
+    fused_lat = sched.latency_s
+    unfused_lat = sched.unfused_latency_s
+    lats = {"DRIM-fused": fused_lat, "DRIM-unfused": unfused_lat,
+            "TPU": tpu_lat}
+    return FusedOffloadReport(
+        n_nodes=sched.n_nodes, n_bits=n_bits,
+        fused_latency_s=fused_lat, fused_energy_j=sched.total_energy_j,
+        fused_aaps=sched.aaps_sequential,
+        unfused_latency_s=unfused_lat,
+        unfused_energy_j=sched.unfused_total_energy_j,
+        unfused_aaps=sched.unfused_aaps_sequential,
+        ddr_rows_moved=sched.ddr_rows_moved,
+        unfused_ddr_rows_moved=sched.unfused_ddr_rows_moved,
+        tpu_latency_s=tpu_lat, tpu_energy_j=tpu_e,
+        winner=min(lats, key=lats.get),
+        speedup_vs_unfused=unfused_lat / max(fused_lat, 1e-30),
+        speedup_vs_tpu=tpu_lat / max(fused_lat, 1e-30),
+        rows_used=sched.rows_used, waves=sched.waves,
+        simulated=simulated)
 
 
 def plan_model_payloads(cfg) -> Dict[str, OffloadReport]:

@@ -27,7 +27,9 @@ Semantics per op (results read back from the Table-2 destination rows):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from typing import Dict, List, Sequence, Tuple
 
 import jax
@@ -38,7 +40,9 @@ from repro.core import (AAP, DRIM_R, DrimGeometry, cost, encode,
                         make_subarray, microprogram_add, microprogram_copy,
                         microprogram_maj3, microprogram_not,
                         microprogram_xnor2, microprogram_xor2)
-from repro.core.device import (DrimDevice, device_run_program, make_device)
+from repro.core.device import (DrimDevice, device_load_rows,
+                               device_read_rows, device_run_program,
+                               make_device)
 from repro.core.energy import E_AAP_NJ_PER_KB
 from repro.core.subarray import WORD_BITS
 
@@ -187,16 +191,52 @@ def plan_schedule(op: str, n_bits: int, *,
     )
 
 
-@jax.jit
-def _load_and_run(dev: DrimDevice, tiles: jax.Array,
-                  encoded: jax.Array) -> DrimDevice:
-    """One wave: write operand k's tiles into word-line k of every slot,
-    then run the encoded stream on the whole stack (single vmapped scan)."""
-    data = dev.data
-    for k in range(tiles.shape[0]):
-        data = data.at[:, :, :, k, :].set(tiles[k])
-    return device_run_program(
-        DrimDevice(data=data, dcc=dev.dcc), encoded)
+# Trace-count telemetry: the wave body below must be traced ONCE per
+# (geometry, program) signature no matter how many waves execute — the
+# whole wave axis runs under a single `lax.map`, so a 1-wave and a
+# 64-wave payload dispatch the same compiled function.  Tests assert the
+# counter is wave-count independent.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@functools.partial(jax.jit, static_argnames=("result_rows",))
+def run_waves(dev0: DrimDevice, staged: jax.Array, encoded: jax.Array,
+              result_rows: Tuple[int, ...]) -> jax.Array:
+    """Execute every wave of a staged payload in ONE traced computation.
+
+    staged: [waves, n_rows_in, chips, banks, subarrays, row_words] —
+    wave w writes its [n_rows_in, ...] block into word-lines
+    [0, n_rows_in) of every slot (operands for the plain scheduler,
+    graph inputs for the fused path), runs the encoded AAP stream, and
+    reads back `result_rows`.  The wave axis is a `lax.map`: one trace,
+    one dispatch, regardless of wave count (waves only differ in data,
+    every slot state starts from `dev0`).
+
+    Returns [waves, len(result_rows), chips, banks, subarrays, row_words].
+    """
+    def one_wave(tiles: jax.Array) -> jax.Array:
+        TRACE_COUNTS["wave_body"] += 1
+        dev = device_load_rows(dev0, 0, jnp.moveaxis(tiles, 0, 3))
+        out = device_run_program(dev, encoded)
+        return device_read_rows(out, result_rows)
+
+    return jax.lax.map(one_wave, staged)
+
+
+def stage_rows(arrays: Sequence[jax.Array], *, geom: DrimGeometry,
+               ) -> Tuple[jax.Array, int, int]:
+    """Tile flat word arrays onto the fleet: pad to a whole number of
+    waves and reshape to [waves, n_arrays, chips, banks, subarrays,
+    row_words].  Returns (staged, tiles, waves)."""
+    n_words = arrays[0].shape[0]
+    row_w = geom.row_bits // WORD_BITS
+    tiles = _ceil_div(n_words, row_w)
+    waves = _ceil_div(tiles, geom.n_subarrays)
+    pad = waves * geom.n_subarrays * row_w - n_words
+    lead = (waves, geom.chips, geom.banks, geom.subarrays_per_bank, row_w)
+    staged = jnp.stack(
+        [jnp.pad(a, (0, pad)).reshape(lead) for a in arrays], axis=1)
+    return staged, tiles, waves
 
 
 def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
@@ -224,22 +264,15 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
     if not 0 < n_bits <= n_words * WORD_BITS:
         raise ValueError("n_bits out of range for the given operands")
 
-    row_w = geom.row_bits // WORD_BITS
-    tiles = _ceil_div(n_words, row_w)
+    staged, tiles, waves = stage_rows(ops, geom=geom)
     slots = geom.n_subarrays
-    waves = _ceil_div(tiles, slots)
-    pad = waves * slots * row_w - n_words
-    lead = (waves, geom.chips, geom.banks, geom.subarrays_per_bank, row_w)
-    staged = jnp.stack([jnp.pad(o, (0, pad)).reshape(lead) for o in ops])
 
     dev0 = make_device(geom, n_data=N_DATA_ROWS)
     enc = encode(build_program(op))
-    chunks: List[List[jax.Array]] = [[] for _ in RESULT_ROWS[op]]
-    for w in range(waves):
-        out = _load_and_run(dev0, staged[:, w], enc)
-        for i, r in enumerate(RESULT_ROWS[op]):
-            chunks[i].append(out.data[:, :, :, r, :].reshape(-1))
-    results = tuple(jnp.concatenate(c)[:n_words] for c in chunks)
+    outs = run_waves(dev0, staged, enc, tuple(RESULT_ROWS[op]))
+    # [waves, n_res, c, b, s, row_w] -> flat wave-major order per result
+    results = tuple(outs[:, i].reshape(-1)[:n_words]
+                    for i in range(len(RESULT_ROWS[op])))
 
     sched = Schedule(
         op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
@@ -253,6 +286,13 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
 def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
                    geom: DrimGeometry = DRIM_R,
                    ) -> List[Tuple[Tuple[jax.Array, ...], Schedule]]:
-    """Convenience: run an op list [(op, operands), ...] back-to-back on
-    the same fleet; total latency/energy is the sum over schedules."""
+    """Run an op list [(op, operands), ...] back-to-back on the same
+    fleet; total latency/energy is the sum over schedules.
+
+    This is the UNFUSED baseline: every op reloads its operands over
+    the DDR bus and reads its results back to the host.  Dependent op
+    chains should use `pim.graph.BulkGraph` + `execute_graph`, which
+    compile the whole DAG into one resident AAP stream; the
+    differential suite holds the two paths bit-identical.
+    """
     return [execute(op, *args, geom=geom) for op, args in ops]

@@ -17,7 +17,8 @@ from repro.core import (encode, make_subarray, run_program_py,
                         microprogram_not, microprogram_xnor2,
                         microprogram_xor2)
 from repro.core.device import (DrimDevice, device_load_rows,
-                               device_read_row, device_run_program,
+                               device_read_row, device_read_row_window,
+                               device_read_rows, device_run_program,
                                device_template, make_device)
 from repro.kernels.ref import bitwise_ref
 
@@ -96,6 +97,22 @@ def test_dra_destroys_sources_across_stack(filled_device):
     for wl in (t.wl_x(1), t.wl_x(2)):  # DRA sources = staged copies
         np.testing.assert_array_equal(np.asarray(device_read_row(out, wl)),
                                       xnor)
+
+
+def test_row_window_read_helpers(filled_device):
+    """device_read_rows gathers arbitrary word-lines row-axis-first
+    (the fused executor's readback path) and device_read_row_window is
+    its contiguous mirror of device_load_rows."""
+    dev = filled_device
+    gathered = np.asarray(device_read_rows(dev, (2, 0, 2)))
+    assert gathered.shape == (3, dev.chips, dev.banks, dev.subarrays,
+                              dev.words)
+    for i, wl in enumerate((2, 0, 2)):
+        np.testing.assert_array_equal(gathered[i],
+                                      np.asarray(device_read_row(dev, wl)))
+    window = np.asarray(device_read_row_window(dev, 1, 2))
+    np.testing.assert_array_equal(
+        window, np.asarray(device_read_rows(dev, (1, 2))))
 
 
 def test_acceptance_stack_shape(small_geom, filled_device):

@@ -1,0 +1,91 @@
+"""Golden cost-model regression: calibration drift must fail LOUDLY.
+
+Every number here is a literal, not a recomputation — if a change to the
+Table-2 microprograms, the timing/energy constants, or the scheduler's
+tiling shifts any of them, the diff shows up as a failed equality
+against a hard-coded value, and whoever made the change has to re-derive
+the calibration story (paper Table 2 / §3.4 / Fig. 8) on purpose.
+"""
+import pytest
+
+from repro.core import (AAP_COUNTS, DRIM_R, DRIM_S, T_AAP_S, cost,
+                        drim_throughput_bits)
+from repro.core.energy import (E_AAP_NJ_PER_KB, E_ACCESS_NJ_PER_KB,
+                               E_IO_NJ_PER_KB)
+from repro.pim.bnn import bnn_dot_graph
+from repro.pim.graph import compile_graph, plan_graph_schedule
+from repro.pim.scheduler import OP_ARITY, build_program, plan_schedule
+
+# Exact analytic values may carry float rounding; this tolerance is far
+# below any real calibration change.
+TIGHT = dict(rel=1e-12)
+
+
+def test_table2_aap_counts_golden():
+    """Paper Table 2, per-op AAP counts — the cycle-count canon."""
+    assert AAP_COUNTS == {"copy": 1, "not": 2, "maj3": 4, "xnor2": 3,
+                          "xor2": 4, "add": 7}
+    # The scheduler's emitted microprograms must match the canon (xor2's
+    # +1 readback AAP and copy's single AAP included).
+    measured = {op: cost(build_program(op))[0] for op in OP_ARITY}
+    assert measured == {"copy": 1, "not": 2, "xnor2": 3, "xor2": 4,
+                        "maj3": 4, "add": 7}
+
+
+def test_calibration_constants_golden():
+    assert T_AAP_S == 90e-9
+    assert E_AAP_NJ_PER_KB == 1.58
+    assert E_ACCESS_NJ_PER_KB == 60.0
+    assert E_IO_NJ_PER_KB == 104.0
+    assert DRIM_R.parallel_bits == 2_097_152
+    assert DRIM_S.parallel_bits == 9_961_472
+
+
+def test_plan_schedule_drim_r_golden():
+    """1 Gbit payload on DRIM-R: tiling, latency, energy as literals."""
+    golden = {
+        # op: (aaps_per_tile, waves, latency_s, energy_j)
+        "copy": (1, 512, 4.608e-05, 2.0709376e-04),
+        "not": (2, 512, 9.216e-05, 4.1418752e-04),
+        "xnor2": (3, 512, 1.3824e-04, 6.2128128e-04),
+        "xor2": (4, 512, 1.8432e-04, 8.2837504e-04),
+        "maj3": (4, 512, 1.8432e-04, 8.2837504e-04),
+        "add": (7, 512, 3.2256e-04, 1.44965632e-03),
+    }
+    for op, (aaps, waves, lat, en) in golden.items():
+        s = plan_schedule(op, 2 ** 30, geom=DRIM_R)
+        assert s.tiles == 4_194_304
+        assert (s.aaps_per_tile, s.waves) == (aaps, waves)
+        assert s.latency_s == pytest.approx(lat, **TIGHT)
+        assert s.energy_j == pytest.approx(en, **TIGHT)
+
+
+def test_fig8_analytic_throughput_golden():
+    """Fig. 8 analytic points for both DRIM geometries (bits/s)."""
+    golden = {
+        (DRIM_R, "not"): 11_650_844_444_444.445,
+        (DRIM_R, "xnor2"): 7_767_229_629_629.629,
+        (DRIM_R, "add"): 3_328_812_698_412.698,
+        (DRIM_S, "not"): 55_341_511_111_111.11,
+        (DRIM_S, "xnor2"): 36_894_340_740_740.74,
+        (DRIM_S, "add"): 15_811_860_317_460.316,
+    }
+    for (geom, op), want in golden.items():
+        assert drim_throughput_bits(geom, op) == pytest.approx(want,
+                                                               **TIGHT)
+
+
+def test_fused_bnn_graph_golden():
+    """The fused compiler's output for the K=16 BNN graph is part of the
+    cost canon: program length, row budget, DDR traffic — all literals.
+    16 XNORs at 1 AAP (in-place DRA) + 16x5 adds at 7 AAPs = 576."""
+    fp = compile_graph(bnn_dot_graph(16))
+    assert fp.aaps_per_tile == 576
+    assert fp.unfused_aaps_per_tile == 608      # 16*3 + 80*7
+    assert fp.n_data_rows == 37
+    assert fp.ddr_rows_per_tile == 33 + 5       # 2K+1 inputs + 5 counters
+    assert fp.unfused_ddr_rows_per_tile == 16 * 3 + 80 * 5
+    s = plan_graph_schedule(bnn_dot_graph(16), 2 ** 20, geom=DRIM_R)
+    assert s.waves == 1 and s.tiles == 4096
+    assert s.latency_s == pytest.approx(576 * 90e-9, **TIGHT)
+    assert s.speedup_vs_unfused == pytest.approx(608 / 576, **TIGHT)

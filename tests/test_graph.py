@@ -1,0 +1,324 @@
+"""Differential tests for the fused dataflow-graph layer.
+
+The fused executor is locked down against two independent references:
+the pure-numpy oracle (`graph_ref_results`, kernels/ref.py semantics)
+and the UNFUSED path (`scheduler.execute` op by op, host round trips
+between nodes) — any row-allocation, elision, or wave-tiling bug shows
+up as a three-way disagreement.  Random DAGs come from hypothesis (or
+the seeded `tests/_hypo.py` fallback) across geometries, ragged bit
+tails, and multi-wave tilings.
+"""
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.core import DrimGeometry
+from repro.kernels.ref import pack_signs_ref, xnor_gemm_ref
+from repro.pim import (BulkGraph, OP_ARITY, compile_graph, execute,
+                       execute_graph, execute_oplist, graph_ref_results,
+                       plan_graph_schedule)
+from repro.pim.bnn import bnn_dot_drim, bnn_dot_graph, counter_bits
+
+GEOMS = (
+    DrimGeometry(chips=1, banks=1, subarrays_per_bank=1, row_bits=32),
+    DrimGeometry(chips=1, banks=2, subarrays_per_bank=2, row_bits=64),
+    DrimGeometry(chips=2, banks=2, subarrays_per_bank=2, row_bits=32),
+)
+OPS = ("copy", "not", "xnor2", "xor2", "maj3", "add")
+
+
+def random_graph(rng, max_nodes=8):
+    """A random DAG: operands drawn from all earlier values, a random
+    subset of values exported (always including the last result)."""
+    g = BulkGraph()
+    n_inputs = int(rng.integers(1, 5))
+    values = [g.input(f"in{i}") for i in range(n_inputs)]
+    n_nodes = int(rng.integers(1, max_nodes + 1))
+    for _ in range(n_nodes):
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        opnds = [values[int(rng.integers(0, len(values)))]
+                 for _ in range(OP_ARITY[op])]
+        out = g.op(op, *opnds)
+        values.extend(out if isinstance(out, tuple) else (out,))
+    n_outs = int(rng.integers(1, 4))
+    picks = {len(values) - 1} | {int(rng.integers(0, len(values)))
+                                 for _ in range(n_outs)}
+    for j, vi in enumerate(sorted(picks)):
+        g.output(f"out{j}", values[vi])
+    return g
+
+
+def run_unfused(graph, feeds, geom):
+    """The pre-fusion path: one `execute()` per node, intermediates
+    round-tripped through the host between ops."""
+    vals = {vid: np.asarray(feeds[name], np.uint32)
+            for name, vid in zip(graph.input_names, graph.input_vids)}
+    for opname, opnds, res in graph.nodes:
+        args = [vals[v] for v in opnds]
+        results, _ = execute(opname, *args, geom=geom)
+        for v, r in zip(res, results):
+            vals[v] = np.asarray(r)
+    return {name: vals[vid] for name, vid in graph.outputs.items()}
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_random_dag_three_way_differential(seed):
+    """fused == unfused == numpy oracle, bit for bit, over random DAGs,
+    geometries, operand sizes, and ragged bit tails."""
+    rng = np.random.default_rng(seed)
+    graph = random_graph(rng)
+    geom = GEOMS[int(rng.integers(0, len(GEOMS)))]
+    row_w = geom.row_bits // 32
+    max_words = 2 * geom.n_subarrays * row_w + 3   # up to ~2 waves + tail
+    n_words = int(rng.integers(1, max_words + 1))
+    feeds = {name: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+             for name in graph.input_names}
+    # ragged tail inside the last word (the only range execute_graph
+    # accepts — oversized feeds are rejected, see test_graph_api_errors)
+    n_bits = int(rng.integers((n_words - 1) * 32 + 1, n_words * 32 + 1))
+
+    fused, sched = execute_graph(graph, feeds, geom=geom, n_bits=n_bits)
+    ref = graph_ref_results(graph, feeds)
+    unfused = run_unfused(graph, feeds, geom)
+    assert set(fused) == set(ref) == set(unfused)
+    for name in ref:
+        np.testing.assert_array_equal(np.asarray(fused[name]), ref[name])
+        np.testing.assert_array_equal(unfused[name], ref[name])
+    # fusion can never be more expensive than the oplist chain
+    assert sched.aaps_per_tile <= sched.unfused_aaps_per_tile
+    assert sched.ddr_rows_per_tile <= sched.unfused_ddr_rows_per_tile
+    assert sched.n_bits == n_bits
+    assert sched.waves == -(-sched.tiles // sched.slots)
+
+
+def test_chain_matches_execute_oplist_and_saves(small_geom):
+    """A linear xnor2 -> maj3 -> add chain: fused results equal the
+    execute_oplist results, with strictly fewer AAPs and DDR rows."""
+    rng = np.random.default_rng(5)
+    n_words = 2 * small_geom.n_subarrays * (small_geom.row_bits // 32) + 1
+    a, b, c = (rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+               for _ in range(3))
+
+    g = BulkGraph()
+    va, vb, vc = g.input("a"), g.input("b"), g.input("c")
+    x = g.op("xnor2", va, vb)
+    m = g.op("maj3", x, vb, vc)
+    s, co = g.op("add", m, va, vc)
+    g.output("s", s)
+    g.output("co", co)
+    fused, sched = execute_graph(g, {"a": a, "b": b, "c": c},
+                                 geom=small_geom)
+
+    chain = execute_oplist([("xnor2", (a, b))], geom=small_geom)
+    x_np = np.asarray(chain[0][0][0])
+    chain += execute_oplist([("maj3", (x_np, b, c))], geom=small_geom)
+    m_np = np.asarray(chain[1][0][0])
+    chain += execute_oplist([("add", (m_np, a, c))], geom=small_geom)
+    (s_np, co_np), _ = chain[2]
+    np.testing.assert_array_equal(np.asarray(fused["s"]), s_np)
+    np.testing.assert_array_equal(np.asarray(fused["co"]), co_np)
+
+    unfused_aaps = sum(sc.aaps_sequential for _, sc in chain)
+    unfused_ddr = sum((OP_ARITY[o] + nres) * sc.tiles for (o, nres, sc) in
+                      (("xnor2", 1, chain[0][1]), ("maj3", 1, chain[1][1]),
+                       ("add", 2, chain[2][1])))
+    assert sched.aaps_sequential < unfused_aaps
+    assert sched.unfused_aaps_sequential == unfused_aaps
+    assert sched.ddr_rows_moved < unfused_ddr
+    assert sched.unfused_ddr_rows_moved == unfused_ddr
+    assert sched.waves == 3    # 2 full waves + tail tile
+
+
+def test_elision_counts():
+    """Per-op AAP savings from destructive-read elision: dying operands
+    are charge-shared in place (xnor2 3->1, xor2 4->2, maj3 4->1), live
+    operands are staged through x-rows as in Table 2."""
+    g = BulkGraph()
+    a, b, c = g.input("a"), g.input("b"), g.input("c")
+    d = g.input("d")
+    x = g.op("xnor2", a, b)       # a, b die here -> single DRA
+    y = g.op("xor2", x, c)        # x dies, c lives on -> 1 copy + 2
+    z = g.op("maj3", y, c, d)     # all three dead -> single TRA
+    g.output("z", z)
+    fp = compile_graph(g)
+    assert fp.aaps_per_tile == 1 + 3 + 1
+    assert fp.unfused_aaps_per_tile == 3 + 4 + 4
+
+    # An input pinned as output is host-aliased, so its row may still
+    # be consumed — but a DEVICE output (node result) is pinned and
+    # must be staged through an x-row by later readers.
+    g2 = BulkGraph()
+    a, b, c = g2.input("a"), g2.input("b"), g2.input("c")
+    x = g2.op("xnor2", a, b)      # a, b die -> 1 AAP
+    y = g2.op("xnor2", x, c)      # x pinned below -> copy; c dies
+    g2.output("x", x)
+    g2.output("y", y)
+    g2.output("a", a)             # host alias, no effect on rows
+    fp2 = compile_graph(g2)
+    assert fp2.aaps_per_tile == 1 + 2
+    assert ("a", "a") in fp2.alias_outputs
+
+    # Same dying value twice: only one slot may consume the row.
+    g3 = BulkGraph()
+    a = g3.input("a")
+    x = g3.op("xnor2", a, a)      # XNOR(a, a) == ~0
+    g3.output("x", x)
+    fp3 = compile_graph(g3)
+    assert fp3.aaps_per_tile == 2
+    out, _ = execute_graph(
+        g3, {"a": np.uint32([3, 5])},
+        geom=DrimGeometry(chips=1, banks=1, subarrays_per_bank=1,
+                          row_bits=64))
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.uint32([0xFFFFFFFF] * 2))
+
+
+def test_copy_elision_and_aliasing(small_geom):
+    """copy nodes cost 0 AAPs and 0 rows; a copy-of-copy of an input is
+    satisfied host-side — nothing is loaded or read back at all."""
+    g = BulkGraph()
+    a = g.input("a")
+    b = g.op("copy", a)
+    c = g.op("copy", b)
+    g.output("c", c)
+    fp = compile_graph(g)
+    assert fp.aaps_per_tile == 0
+    assert fp.n_data_rows == 0
+    assert fp.loaded_inputs == () and fp.readback_rows == ()
+    assert fp.alias_outputs == (("c", "a"),)
+    x = np.random.default_rng(1).integers(0, 1 << 32, 7, dtype=np.uint32)
+    out, sched = execute_graph(g, {"a": x}, geom=small_geom)
+    np.testing.assert_array_equal(np.asarray(out["c"]), x)
+    assert sched.aaps_saved_per_tile == 2
+    assert sched.ddr_rows_per_tile == 0
+    assert sched.unfused_ddr_rows_per_tile == 4
+
+    # A copy whose source feeds a real op shares that op's row.
+    g2 = BulkGraph()
+    a2, b2 = g2.input("a"), g2.input("b")
+    cp = g2.op("copy", a2)
+    x2 = g2.op("xnor2", cp, b2)   # reads a2's row through the alias
+    g2.output("x", x2)
+    fp2 = compile_graph(g2)
+    assert fp2.loaded_inputs == ("a", "b")
+    assert fp2.aaps_per_tile == 1      # both storages die at the xnor2
+    arrs = {n: np.random.default_rng(9).integers(0, 1 << 32, 5,
+                                                 dtype=np.uint32)
+            for n in ("a", "b")}
+    out2, _ = execute_graph(g2, arrs, geom=small_geom)
+    np.testing.assert_array_equal(np.asarray(out2["x"]),
+                                  ~(arrs["a"] ^ arrs["b"]))
+
+
+def test_row_recycling_keeps_budget_flat():
+    """A deep chain reuses dead rows: peak live values stays O(1) even
+    for a long dependency chain."""
+    g = BulkGraph()
+    v = g.input("a")
+    w = g.input("b")
+    for _ in range(40):
+        v = g.op("xnor2", v, w)
+    g.output("v", v)
+    fp = compile_graph(g)
+    assert fp.n_data_rows <= 4
+    geom = DrimGeometry(chips=1, banks=1, subarrays_per_bank=2,
+                        row_bits=32)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, 1 << 32, 3, dtype=np.uint32)
+    b = rng.integers(0, 1 << 32, 3, dtype=np.uint32)
+    out, _ = execute_graph(g, {"a": a, "b": b}, geom=geom)
+    ref = graph_ref_results(g, {"a": a, "b": b})
+    np.testing.assert_array_equal(np.asarray(out["v"]), ref["v"])
+
+
+def test_bnn_dot_product_bit_exact(small_geom, n_examples):
+    """Tentpole acceptance: fused XNOR -> popcount-accumulate BNN dot
+    products, bit-exact vs kernels/ref.py:xnor_gemm_ref, with strictly
+    fewer AAPs and DDR row loads than the unfused chain."""
+    rng = np.random.default_rng(0xB22)
+    cases = [(3, 4, 7), (5, 6, 16), (4, 8, 33)][:max(2, n_examples // 2)]
+    for m, n, k in cases:
+        a_bits = rng.integers(0, 2, (m, k)).astype(np.uint8)
+        b_bits = rng.integers(0, 2, (n, k)).astype(np.uint8)
+        c, sched = bnn_dot_drim(a_bits, b_bits, geom=small_geom)
+
+        w32 = -(-k // 32) * 32
+        ap = np.full((m, w32), -1.0, np.float32)
+        ap[:, :k] = np.where(a_bits, 1.0, -1.0)
+        bp = np.full((n, w32), -1.0, np.float32)
+        bp[:, :k] = np.where(b_bits, 1.0, -1.0)
+        ref = np.asarray(xnor_gemm_ref(pack_signs_ref(ap),
+                                       pack_signs_ref(bp), k))
+        np.testing.assert_array_equal(c, ref)
+        assert sched.aaps_sequential < sched.unfused_aaps_sequential
+        assert sched.ddr_rows_moved < sched.unfused_ddr_rows_moved
+        assert sched.n_nodes == k * (1 + counter_bits(k))
+
+
+def test_closed_form_matches_measured(small_geom):
+    g = bnn_dot_graph(6)
+    n_bits = 3 * small_geom.parallel_bits - 17
+    planned = plan_graph_schedule(g, n_bits, geom=small_geom)
+    n_words = -(-n_bits // 32)
+    rng = np.random.default_rng(3)
+    feeds = {name: (np.zeros(n_words, np.uint32) if name == "zero" else
+                    rng.integers(0, 1 << 32, n_words, dtype=np.uint32))
+             for name in g.input_names}
+    _, measured = execute_graph(g, feeds, geom=small_geom, n_bits=n_bits)
+    assert planned == measured
+
+
+def test_graph_api_errors(small_geom):
+    g = BulkGraph()
+    a = g.input("a")
+    with pytest.raises(ValueError):
+        g.input("a")                      # duplicate input
+    with pytest.raises(ValueError):
+        g.op("nand", a, a)                # unknown op
+    with pytest.raises(ValueError):
+        g.op("xnor2", a)                  # arity mismatch
+    other = BulkGraph()
+    with pytest.raises(ValueError):
+        g.op("not", other.input("b"))     # cross-graph operand
+    with pytest.raises(ValueError):
+        g.output("o", other.input("c"))   # cross-graph output
+    with pytest.raises(ValueError):
+        compile_graph(g)                  # no outputs
+
+    x = g.op("not", a)
+    g.output("x", x)
+    with pytest.raises(ValueError):
+        g.output("x", x)                  # duplicate output name
+    with pytest.raises(ValueError):
+        execute_graph(g, {}, geom=small_geom)            # missing feed
+    with pytest.raises(ValueError):
+        execute_graph(g, {"a": np.uint32([1]),
+                          "b": np.uint32([1])}, geom=small_geom)
+    with pytest.raises(ValueError):
+        execute_graph(g, {"a": np.uint32([1])}, geom=small_geom,
+                      n_bits=64)          # n_bits beyond the feed
+    with pytest.raises(ValueError):
+        # oversized feed: n_bits must reach into the LAST word, else
+        # the executed wave count would diverge from the closed form
+        execute_graph(g, {"a": np.uint32([1, 2, 3])}, geom=small_geom,
+                      n_bits=32)
+    with pytest.raises(ValueError):
+        plan_graph_schedule(g, 0)         # n_bits must be positive
+
+
+def test_row_budget_enforced():
+    """More simultaneously-live values than the sub-array's data rows is
+    a compile error, not a silent wrap."""
+    g = BulkGraph()
+    vals = [g.input(f"i{k}") for k in range(10)]
+    for j, v in enumerate(vals):
+        g.output(f"o{j}", g.op("not", v))
+    # Each input dies at its `not`, so every result recycles its
+    # operand's row in place — but all 10 results are pinned, so the
+    # peak is exactly the 10 input rows.
+    with pytest.raises(ValueError):
+        compile_graph(g, row_budget=8)
+    assert compile_graph(g, row_budget=10).n_data_rows == 10
+    with pytest.raises(ValueError):
+        plan_graph_schedule(g, 256, row_budget=8)

@@ -1,0 +1,97 @@
+"""Offload-planner edge cases: zero-savings placements, fused-path
+simulate/analytic agreement, and error paths."""
+import pytest
+
+from repro.pim import BulkGraph, plan, plan_fused
+from repro.pim.bnn import bnn_dot_graph
+from repro.pim.offload import SIMULATE_MAX_BITS
+
+
+def single_not_graph():
+    """One `not` over one input: nothing to elide, nothing resident —
+    the fused program is byte-for-byte the unfused one."""
+    g = BulkGraph()
+    g.output("y", g.op("not", g.input("a")))
+    return g
+
+
+def test_zero_savings_placement():
+    """A single-node graph fuses to exactly the unfused numbers: the
+    planner must report zero savings, not invent any."""
+    rep = plan_fused(single_not_graph(), 2 ** 20)
+    assert rep.fused_aaps == rep.unfused_aaps
+    assert rep.ddr_rows_moved == rep.unfused_ddr_rows_moved
+    assert rep.speedup_vs_unfused == pytest.approx(1.0)
+    assert rep.fused_latency_s == pytest.approx(rep.unfused_latency_s)
+    assert rep.fused_energy_j == pytest.approx(rep.unfused_energy_j)
+
+
+def test_staging_through_host_can_erase_the_win():
+    """Locality verdict flips when operands must be staged into DRAM."""
+    in_dram = plan("xnor2", 2 ** 30, operands_in_dram=True)
+    staged = plan("xnor2", 2 ** 30, operands_in_dram=False)
+    assert in_dram.winner == "DRIM"
+    assert staged.drim_latency_s > in_dram.drim_latency_s
+    assert staged.winner == "TPU"
+
+
+def test_fused_simulate_matches_analytic(small_geom):
+    """simulate=True runs the graph on the functional fleet; the
+    measured schedule must price identically to the closed form."""
+    g = bnn_dot_graph(4)
+    n_bits = 2 * small_geom.parallel_bits - 9
+    sim = plan_fused(g, n_bits, geom=small_geom, simulate=True)
+    ana = plan_fused(g, n_bits, geom=small_geom)
+    assert sim.simulated and not ana.simulated
+    assert sim.fused_latency_s == ana.fused_latency_s
+    assert sim.fused_energy_j == ana.fused_energy_j
+    assert sim.fused_aaps == ana.fused_aaps
+    assert sim.waves == ana.waves
+    assert dataclass_equal_except(sim, ana, "simulated")
+
+
+def dataclass_equal_except(a, b, *skip):
+    import dataclasses
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    for k in skip:
+        da.pop(k), db.pop(k)
+    return da == db
+
+
+def test_simulate_cap_falls_back_to_closed_form():
+    """Payloads above SIMULATE_MAX_BITS are priced analytically even
+    when simulation is requested."""
+    rep = plan("xnor2", 2 * SIMULATE_MAX_BITS, simulate=True)
+    assert not rep.simulated
+    big = plan_fused(single_not_graph(), 2 * SIMULATE_MAX_BITS,
+                     simulate=True)
+    assert not big.simulated
+
+
+def test_error_paths():
+    with pytest.raises(ValueError):
+        plan("nand", 2 ** 20)              # unknown op
+    with pytest.raises(ValueError):
+        plan("xnor2", 0)                   # empty payload
+    with pytest.raises(ValueError):
+        plan("xnor2", -5)
+    with pytest.raises(ValueError):
+        plan_fused(BulkGraph(), 2 ** 20)   # graph with no outputs
+    g = BulkGraph()
+    a = g.input("a")
+    with pytest.raises(ValueError):
+        g.op("xnor2", a)                   # arity mismatch at build time
+    with pytest.raises(ValueError):
+        plan_fused(single_not_graph(), 0)  # n_bits must be positive
+
+
+def test_fused_beats_unfused_and_reports_rows():
+    """The BNN chain must show strict savings and a sane row budget on
+    the real DRIM-R geometry."""
+    rep = plan_fused(bnn_dot_graph(32), 2 ** 27)
+    assert rep.fused_aaps < rep.unfused_aaps
+    assert rep.ddr_rows_moved < rep.unfused_ddr_rows_moved
+    assert rep.speedup_vs_unfused > 1.0
+    assert rep.fused_energy_j < rep.unfused_energy_j
+    assert 0 < rep.rows_used <= 500
+    assert rep.winner in ("DRIM-fused", "TPU")
