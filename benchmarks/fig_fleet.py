@@ -1,0 +1,141 @@
+"""Fleet weak-scaling figure: wall-clock simulator throughput vs fleet size.
+
+Sweeps the fleet geometry along all three slot axes (subarrays x banks x
+chips) up to the paper's DRIM-S point (256 banks x 152 computational
+sub-arrays, §3.4) with a FIXED number of waves per point (weak scaling:
+payload grows with the fleet), and measures, per geometry:
+
+  * the SIMULATED device throughput from the schedule (bits/s — the
+    paper-model curve, linear in active sub-arrays), and
+  * the WALL-CLOCK simulator throughput (row-wide results/s) of three
+    execution paths through `pim.scheduler.execute`:
+      baseline  PR 2 loop — full device state through the vmapped
+                `lax.scan` interpreter, eager host staging
+      resident  trace-time-unrolled program over device-resident tiles,
+                staged buffer donated to XLA
+      sharded   resident + `shard_map` over a (chips, banks)
+                `pim.mesh.fleet_mesh` (1x1 on a single device; run under
+                XLA_FLAGS=--xla_force_host_platform_device_count=N to
+                exercise real partitioning)
+
+The PR acceptance assertion runs as part of the benchmark: at DRIM-S
+geometry on a single host the resident path must deliver >= 2x the
+baseline's rows/s.  Records land in BENCH_fleet.json via
+`benchmarks.record`.
+
+    PYTHONPATH=src python -m benchmarks.fig_fleet
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import record
+from repro.core import DRIM_S, DrimGeometry
+from repro.pim import execute, fleet_mesh, plan_schedule, random_operands
+from repro.core.subarray import WORD_BITS
+
+OP = "xnor2"
+WAVES = 4          # fixed work per slot -> weak scaling
+TIMED_ITERS = 2
+
+# subarray axis, then bank axis, then the full DRIM-S point (chips stay
+# 1 as in the paper's 3D-stacked part; the chips axis is exercised by
+# the sharded test suite's 2-chip geometries).
+GEOM_LADDER = (
+    ("subarrays", DrimGeometry(chips=1, banks=8, subarrays_per_bank=16)),
+    ("subarrays", DrimGeometry(chips=1, banks=8, subarrays_per_bank=152)),
+    ("banks", DrimGeometry(chips=1, banks=64, subarrays_per_bank=152)),
+    ("drim_s", DRIM_S),
+)
+
+
+def _geometry_dict(geom: DrimGeometry) -> dict:
+    return {"chips": geom.chips, "banks": geom.banks,
+            "subarrays_per_bank": geom.subarrays_per_bank,
+            "row_bits": geom.row_bits, "slots": geom.n_subarrays}
+
+
+def _bench_path(path: str, geom: DrimGeometry, operands, n_words: int):
+    """Wall-clock one execution path end to end (staging -> waves ->
+    host readback), warm compile excluded."""
+    kwargs = {"baseline": {"engine": "baseline"}, "resident": {},
+              "sharded": {"mesh": fleet_mesh(geom)}}[path]
+
+    def call():
+        (res,), sched = execute(OP, *operands, geom=geom, **kwargs)
+        return np.asarray(res), sched
+
+    _, sched = call()                        # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(TIMED_ITERS):
+        out, _ = call()
+    wall = (time.perf_counter() - t0) / TIMED_ITERS
+    return wall, sched, out
+
+
+def sweep(ladder=GEOM_LADDER, waves=WAVES):
+    """[(label, geom, {path: (wall_s, rows_per_s)}, sched), ...]"""
+    rows = []
+    for label, geom in ladder:
+        row_w = geom.row_bits // WORD_BITS
+        n_words = waves * geom.n_subarrays * row_w
+        operands = random_operands(OP, n_words, seed=geom.n_subarrays)
+        sched = plan_schedule(OP, n_words * WORD_BITS, geom=geom)
+        ref = None
+        per_path = {}
+        for path in ("baseline", "resident", "sharded"):
+            wall, measured, out = _bench_path(path, geom, operands, n_words)
+            assert measured.waves == waves
+            if ref is None:
+                ref = out
+            else:
+                np.testing.assert_array_equal(out, ref)  # paths agree
+            per_path[path] = (wall, measured.tiles / wall)
+            record.add(
+                "fleet", op=OP, geometry=_geometry_dict(geom), path=path,
+                rows_per_s=measured.tiles / wall,
+                sim_throughput_bits_s=sched.throughput_bits_s,
+                wall_s=wall, waves=waves, tiles=measured.tiles,
+                n_devices=len(jax.devices()))
+        rows.append((label, geom, per_path, sched))
+    return rows
+
+
+def run(csv_rows):
+    t0 = time.time()
+    rows = sweep()
+    us = (time.time() - t0) * 1e6
+
+    print(f"\n-- fleet weak scaling: {WAVES} waves of {OP} per point, "
+          f"{TIMED_ITERS} timed iters ({len(jax.devices())} device(s)) --")
+    print(f"{'point':>10}{'slots':>8}{'sim Tbit/s':>12}"
+          f"{'base Mrow/s':>13}{'resid':>9}{'shard':>9}{'resid x':>9}")
+    for label, geom, per_path, sched in rows:
+        base = per_path["baseline"][1]
+        res = per_path["resident"][1]
+        sh = per_path["sharded"][1]
+        print(f"{label:>10}{geom.n_subarrays:>8}"
+              f"{sched.throughput_bits_s / 1e12:>12.3f}"
+              f"{base / 1e6:>13.2f}{res / 1e6:>9.2f}{sh / 1e6:>9.2f}"
+              f"{res / base:>9.2f}")
+
+    # Acceptance: >= 2x wall-clock sim throughput over the PR 2 baseline
+    # at DRIM-S geometry on a single host (donation + resident staging).
+    _, _, drim_s, _ = rows[-1]
+    speedup = drim_s["resident"][1] / drim_s["baseline"][1]
+    assert speedup >= 2.0, (
+        f"resident path only {speedup:.2f}x over baseline at DRIM-S")
+    print(f"\nDRIM-S resident speedup over baseline: {speedup:.2f}x "
+          f"(acceptance floor 2x)")
+
+    csv_rows.append(("fig_fleet", us, f"drim_s_speedup={speedup:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run([])
+    for path in record.flush("."):
+        print(f"wrote {path}")

@@ -69,10 +69,23 @@ def simulated_check(m=SIM_M, n=SIM_N, k=SIM_K, geom=SIM_GEOM):
 
 
 def run(csv_rows):
+    from benchmarks import record
     t0 = time.time()
     rows = sweep()
     sim = simulated_check()
     us = (time.time() - t0) * 1e6
+    for k, s in rows:
+        record.add(
+            "fusion", op=f"bnn_dot[K={k}]",
+            geometry={"chips": s.chips, "banks": s.banks,
+                      "subarrays_per_bank": s.subarrays_per_bank,
+                      "row_bits": s.row_bits},
+            path="closed_form",
+            sim_throughput_bits_s=s.throughput_bits_s,
+            aaps_per_tile=s.aaps_per_tile,
+            unfused_aaps_per_tile=s.unfused_aaps_per_tile,
+            speedup_vs_unfused=s.speedup_vs_unfused,
+            energy_ratio=s.unfused_total_energy_j / s.total_energy_j)
 
     print("\n-- fused BNN dot-product graph vs unfused execute_oplist "
           "chain (DRIM-R, 2^27-bit planes) --")
@@ -100,4 +113,7 @@ def run(csv_rows):
 
 
 if __name__ == "__main__":
+    from benchmarks import record
     run([])
+    for path in record.flush("."):
+        print(f"wrote {path}")

@@ -1,0 +1,55 @@
+"""Machine-readable benchmark records -> ``BENCH_<bench>.json``.
+
+Every benchmark module appends flat dict records via `add()`;
+`benchmarks.run` (or a module's own ``__main__``) calls `flush()` to
+write one JSON file per bench so the perf trajectory is tracked across
+PRs instead of living in stdout tables.
+
+Record schema (shared across benches; fields absent where meaningless):
+
+    op            str   bulk op or workload name ("xnor2", "bnn_dot[K=8]")
+    geometry      dict  chips / banks / subarrays_per_bank / row_bits
+    path          str   execution path ("baseline" | "resident" | "sharded"
+                        | "closed_form" | ...)
+    rows_per_s    float wall-clock simulator throughput (row-wide results/s)
+    sim_throughput_bits_s
+                  float SIMULATED device throughput from the schedule
+    wall_s        float wall-clock seconds per call
+    extra fields  any   bench-specific (waves, tiles, speedups, ...)
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+_RECORDS: Dict[str, List[dict]] = {}
+
+
+def add(bench: str, **fields) -> dict:
+    """Append one record to `bench`'s list; returns the record."""
+    _RECORDS.setdefault(bench, []).append(fields)
+    return fields
+
+
+def clear(bench: str | None = None) -> None:
+    if bench is None:
+        _RECORDS.clear()
+    else:
+        _RECORDS.pop(bench, None)
+
+
+def flush(out_dir: str = ".") -> List[str]:
+    """Write BENCH_<bench>.json for every bench with records; returns
+    the written paths (records stay buffered until `clear()`)."""
+    paths = []
+    if _RECORDS:
+        os.makedirs(out_dir, exist_ok=True)
+    for bench, records in sorted(_RECORDS.items()):
+        path = os.path.join(out_dir, f"BENCH_{bench}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": bench, "records": records}, f, indent=1,
+                      default=str)
+            f.write("\n")
+        paths.append(path)
+    return paths

@@ -1,37 +1,72 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--only a,b] [--json-dir DIR]
 
 Runs:
     fig8_throughput     Fig. 8  — bulk bit-wise throughput, 8 platforms
     fig9_energy         Fig. 9  — DRAM chip energy per KB
     fig_fusion          fusion  — fused graphs vs unfused op chains
+    fig_fleet           fleet   — weak-scaling sweep, vmap vs shard_map
+                                  vs donated execution paths
     table3_reliability  Table 3 — Monte-Carlo process-variation error
     roofline            brief   — 3-term roofline from the dry-run
+    kernel_adjusted     brief   — kernel-adjusted memory roofline
+                                  (GPU/TPU baselines; needs dry-run
+                                  artifacts, skips gracefully without)
 
-Prints each report plus a final ``name,us_per_call,derived`` CSV block.
+Prints each report plus a final ``name,us_per_call,derived`` CSV block,
+and writes one machine-readable ``BENCH_<bench>.json`` per bench that
+recorded data (see `benchmarks.record` for the schema: op, geometry,
+path, rows/s, simulated throughput) so the perf trajectory is tracked
+across PRs.  DRIM simulation and the GPU/TPU baselines share this one
+CLI and one output format.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
-from benchmarks import (fig8_throughput, fig9_energy, fig_fusion,
+from benchmarks import (fig8_throughput, fig9_energy, fig_fleet,
+                        fig_fusion, kernel_adjusted, record,
                         table3_reliability, roofline)
 
 MODULES = (
     ("fig8_throughput", fig8_throughput),
     ("fig9_energy", fig9_energy),
     ("fig_fusion", fig_fusion),
+    ("fig_fleet", fig_fleet),
     ("table3_reliability", table3_reliability),
     ("roofline", roofline),
+    ("kernel_adjusted", kernel_adjusted),
 )
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks to run")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_*.json records")
+    ap.add_argument("--list", action="store_true",
+                    help="list benchmark names and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, _ in MODULES:
+            print(name)
+        return
+    selected = MODULES
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        unknown = wanted - {name for name, _ in MODULES}
+        if unknown:
+            ap.error(f"unknown benchmarks: {sorted(unknown)}")
+        selected = [(n, m) for n, m in MODULES if n in wanted]
+
     csv_rows = []
     failures = []
-    for name, mod in MODULES:
+    for name, mod in selected:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         try:
             mod.run(csv_rows)
@@ -43,6 +78,9 @@ def main() -> None:
           f"{'=' * 72}")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
+
+    for path in record.flush(args.json_dir):
+        print(f"wrote {path}")
 
     if failures:
         print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)

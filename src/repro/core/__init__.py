@@ -7,14 +7,16 @@ from .subarray import (SubArray, make_subarray, load_rows, activate_read,
                        aap_copy, aap_copy2, aap_dra, aap_tra,
                        pack_bits, unpack_bits, WORD_BITS)
 from .isa import (AAP, OP_COPY, OP_COPY2, OP_DRA, OP_TRA, encode, cost,
-                  run_program, run_program_py, AAP_COUNTS,
+                  run_program, run_program_py, run_program_unrolled,
+                  AAP_COUNTS,
                   microprogram_copy, microprogram_not, microprogram_maj3,
                   microprogram_min3, microprogram_xnor2, microprogram_xor2,
                   microprogram_add, multibit_add_program)
-from .device import (DrimDevice, make_device, device_template,
+from .device import (MESH_AXES, DrimDevice, make_device, device_template,
                      device_load_rows, device_broadcast_rows,
                      device_read_row, device_read_rows,
-                     device_read_row_window, device_run_program)
+                     device_read_row_window, device_run_program,
+                     device_run_program_sharded)
 from .analog import (AnalogParams, dra_analog, tra_analog,
                      monte_carlo_error_rates, PAPER_TABLE3)
 from .timing import (DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits,

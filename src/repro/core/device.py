@@ -17,14 +17,22 @@ layer to tile tensor-sized operands onto slots and account cycles.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from .isa import run_program
 from .subarray import N_XROWS, SubArray, make_subarray, row_words
 from .timing import DrimGeometry
+
+# Mesh axis names the fleet is laid out over (`pim/mesh.py` builds
+# meshes with these axes; `device_run_program_sharded` and the
+# scheduler's sharded wave runner shard the leading device dims on them).
+MESH_AXES = ("chips", "banks")
 
 
 @jax.tree_util.register_dataclass
@@ -146,13 +154,7 @@ def device_read_row_window(dev: DrimDevice, start: int, k: int) -> jax.Array:
     return device_read_rows(dev, range(start, start + k))
 
 
-def device_run_program(dev: DrimDevice, encoded: jax.Array) -> DrimDevice:
-    """Execute one encoded [n, 5] AAP stream on EVERY slot at once.
-
-    One `jax.vmap` over the flattened slot axis of the `lax.scan`
-    interpreter — the SIMD lock-step of paper §3.4.  jit-friendly; the
-    scheduler jits this together with its operand loads.
-    """
+def _device_run_program(dev: DrimDevice, encoded: jax.Array) -> DrimDevice:
     lead = dev.data.shape[:3]
     flat = SubArray(
         data=dev.data.reshape((-1,) + dev.data.shape[3:]),
@@ -163,3 +165,56 @@ def device_run_program(dev: DrimDevice, encoded: jax.Array) -> DrimDevice:
         data=out.data.reshape(lead + out.data.shape[1:]),
         dcc=out.dcc.reshape(lead + out.dcc.shape[1:]),
     )
+
+
+_device_run_program_donating = jax.jit(_device_run_program,
+                                       donate_argnums=(0,))
+
+
+def device_run_program(dev: DrimDevice, encoded: jax.Array, *,
+                       donate: bool = False) -> DrimDevice:
+    """Execute one encoded [n, 5] AAP stream on EVERY slot at once.
+
+    One `jax.vmap` over the flattened slot axis of the `lax.scan`
+    interpreter — the SIMD lock-step of paper §3.4.  jit-friendly; the
+    scheduler jits this together with its operand loads.
+
+    donate=True hands `dev`'s buffers to XLA for in-place reuse (the
+    input becomes invalid — the output state occupies the same memory).
+    The default keeps the input alive, since tests and debugging
+    sessions routinely compare pre/post states.
+    """
+    if donate:
+        return _device_run_program_donating(dev, encoded)
+    return _device_run_program(dev, encoded)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_program_runner(mesh):
+    spec = P(*MESH_AXES)
+
+    def body(data: jax.Array, dcc: jax.Array, encoded: jax.Array):
+        out = _device_run_program(DrimDevice(data=data, dcc=dcc), encoded)
+        return out.data, out.dcc
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(spec, spec, P()), out_specs=(spec, spec),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def device_run_program_sharded(dev: DrimDevice, encoded: jax.Array,
+                               mesh) -> DrimDevice:
+    """`device_run_program` over a (chips, banks) device mesh.
+
+    The slot axis is embarrassingly parallel (every sub-array runs the
+    same stream over its own rows), so `shard_map` splits the leading
+    [chips, banks] dims across `mesh` with NO collectives: each mesh
+    device runs the vmapped scan interpreter on its local block.  The
+    mesh must use `MESH_AXES` names with shapes dividing (chips, banks)
+    — `pim.mesh.fleet_mesh` constructs exactly that, falling back to a
+    1x1 mesh on a single device (bit-identical to the vmap path either
+    way).
+    """
+    data, dcc = _sharded_program_runner(mesh)(dev.data, dev.dcc, encoded)
+    return DrimDevice(data=data, dcc=dcc)

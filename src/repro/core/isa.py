@@ -102,6 +102,62 @@ def run_program_py(sa: SubArray, program: Sequence[AAP]) -> SubArray:
     return sa
 
 
+def run_program_unrolled(program: Sequence[AAP], rows: dict, dcc: dict, *,
+                         n_rows: int, zeros: jax.Array):
+    """Trace-time-specialized interpreter over per-row arrays.
+
+    The AAP stream is always known host-side, so instead of scanning an
+    encoded array through `lax.switch` (which touches the full sub-array
+    state per instruction), the program is unrolled at trace time with
+    STATIC word-line addresses: each row lives in its own array and only
+    the rows an instruction actually reads or writes ever materialize.
+    This is the scheduler's hot path — at DRIM-S scale it is an order of
+    magnitude faster than the scan interpreter while staying bit-exact
+    (the differential suite holds the two engines identical).
+
+    rows: {word_line: [..., words] uint32} — data + x rows present so
+        far; dcc: {cell: [..., words]} — DCC cells A (0) and B (1).
+        A word-line never written reads as `zeros` (a fresh sub-array).
+    n_rows: total normal rows of the emission template (data + x rows);
+        addresses >= n_rows are the dcc1..dcc4 word-lines, resolved to
+        (cell, BL̄-side) statically exactly as `subarray._dcc_split`.
+
+    Mutates and returns (rows, dcc).
+    """
+    def read(wl: int) -> jax.Array:
+        if wl < n_rows:
+            return rows.get(wl, zeros)
+        off = wl - n_rows
+        v = dcc.get(off // 2, zeros)
+        return ~v if off % 2 else v
+
+    def write(wl: int, bl: jax.Array) -> None:
+        if wl < n_rows:
+            rows[wl] = bl
+        else:
+            off = wl - n_rows
+            dcc[off // 2] = ~bl if off % 2 else bl
+
+    for ins in program:
+        a = ins.args
+        if ins.op == OP_COPY:
+            write(a[1], read(a[0]))
+        elif ins.op == OP_COPY2:
+            bl = read(a[0])
+            write(a[1], bl)
+            write(a[2], bl)
+        elif ins.op == OP_DRA:
+            bl = ~(read(a[0]) ^ read(a[1]))
+            for wl in a:            # sources end at the BL level (Fig. 6)
+                write(wl, bl)
+        else:  # OP_TRA
+            x, y, z = read(a[0]), read(a[1]), read(a[2])
+            bl = (x & y) | (x & z) | (y & z)
+            for wl in a:
+                write(wl, bl)
+    return rows, dcc
+
+
 # ---------------------------------------------------------------------------
 # Table-2 microprograms.  Addresses are word-line numbers; helpers take the
 # sub-array only to resolve x1..x8 / dcc1..dcc4 aliases.

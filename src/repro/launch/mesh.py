@@ -6,20 +6,42 @@ state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 import jax
+
+
+def make_named_mesh(shape: Tuple[int, ...], axis_names: Tuple[str, ...],
+                    devices: Optional[Sequence] = None):
+    """Mesh over an explicit device list (default: all of jax.devices()).
+
+    The one mesh constructor everything shares — the production
+    training meshes below and the PIM fleet mesh (`pim/mesh.py`), which
+    needs a strict prefix of the device list when the fleet geometry
+    cannot use every device.
+    """
+    if devices is None:
+        return jax.make_mesh(shape, axis_names)
+    import numpy as np
+    from jax.sharding import Mesh
+    n = 1
+    for s in shape:
+        n *= s
+    return Mesh(np.asarray(devices[:n], dtype=object).reshape(shape),
+                axis_names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_named_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Mesh over whatever devices exist (CPU smoke / single host)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+    return make_named_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -1,11 +1,14 @@
 """Processing-in-memory layer: bulk-op scheduling over the simulated
-DRIM fleet (`scheduler`), fused dataflow graphs with resident
-intermediates (`graph`, `bnn`), and the DRIM-vs-TPU placement planner
-(`offload`)."""
+DRIM fleet (`scheduler`), the (chips, banks) fleet mesh for sharded
+simulation (`mesh`), fused dataflow graphs with resident intermediates
+(`graph`, `bnn`), and the DRIM-vs-TPU placement planner (`offload`)."""
 from .scheduler import (OP_ARITY, REF_OP, RESULT_ROWS, Schedule,
-                        build_program, execute, execute_oplist,
-                        expected_results, plan_schedule, random_operands,
-                        run_waves, stage_rows)
+                        build_program, encoded_program, execute,
+                        execute_oplist, expected_results, plan_schedule,
+                        random_operands, run_waves, run_waves_baseline,
+                        stage_rows)
+from .mesh import (DEVICE_SPEC, STAGED_SPEC, fleet_mesh, fleet_shape,
+                   shard_device, shard_staged)
 from .graph import (BulkGraph, FusedProgram, FusedSchedule, ValueRef,
                     compile_graph, execute_graph, graph_ref_results,
                     plan_graph_schedule)

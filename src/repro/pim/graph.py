@@ -41,10 +41,10 @@ from repro.core import AAP, DRIM_R, OP_COPY, OP_DRA, OP_TRA, DrimGeometry, \
 from repro.core.device import make_device
 from repro.core.energy import (E_ACCESS_NJ_PER_KB, E_AAP_NJ_PER_KB,
                                E_IO_NJ_PER_KB)
-from repro.core.subarray import SubArray, WORD_BITS
+from repro.core.subarray import N_XROWS, SubArray, WORD_BITS
 from repro.pim.scheduler import (OP_ARITY, RESULT_ROWS, Schedule,
                                  _ceil_div, build_program, run_waves,
-                                 stage_rows)
+                                 run_waves_baseline, stage_rows)
 
 # Ops whose charge-sharing read may consume a dying operand row directly.
 _CONSUMING_OPS = frozenset({"xnor2", "xor2", "maj3"})
@@ -188,6 +188,13 @@ class FusedProgram:
     def ddr_rows_per_tile(self) -> int:
         """Fused DDR traffic: operand rows in once, result rows out once."""
         return len(self.loaded_inputs) + len(self.readback_rows)
+
+    @property
+    def template_rows(self) -> int:
+        """Total normal rows of the emission template (data + x rows);
+        program addresses >= this are DCC word-lines.  The unrolled wave
+        engine needs it to resolve addresses statically."""
+        return max(self.n_data_rows, 1) + N_XROWS
 
 
 def compile_graph(graph: BulkGraph, *,
@@ -475,6 +482,7 @@ def execute_graph(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
                   geom: DrimGeometry = DRIM_R,
                   n_bits: Optional[int] = None,
                   row_budget: Optional[int] = DEFAULT_ROW_BUDGET,
+                  mesh=None, engine: str = "resident",
                   ) -> Tuple[Dict[str, jax.Array], FusedSchedule]:
     """Run the whole fused graph on the simulated fleet.
 
@@ -486,12 +494,19 @@ def execute_graph(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
     are returned straight from the feed (the compiler loads and reads
     back nothing for them).  Returns ({output_name: array of length W},
     schedule).
+
+    `mesh`/`engine` mirror `scheduler.execute`: the default "resident"
+    engine runs the fused stream trace-time-unrolled on device-resident
+    tiles, sharded over a (chips, banks) `pim.mesh.fleet_mesh` when one
+    is given; "baseline" is the PR 2 full-state scan loop.
     """
     missing = set(graph.input_names) - set(feeds)
     extra = set(feeds) - set(graph.input_names)
     if missing or extra:
         raise ValueError(f"feed mismatch: missing {sorted(missing)}, "
                          f"unexpected {sorted(extra)}")
+    if engine not in ("resident", "baseline"):
+        raise ValueError(f"unknown engine {engine!r}")
     fp = compile_graph(graph, row_budget=row_budget)
 
     arrays = {n: jnp.asarray(feeds[n], jnp.uint32).reshape(-1)
@@ -516,11 +531,18 @@ def execute_graph(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
     if fp.device_outputs:
         # ceil(ceil(n_bits/32) / (row_bits/32)) == ceil(n_bits/row_bits),
         # so the word-tiled staging agrees with the bit-based plan above.
-        staged, tiles, waves = stage_rows(
-            [arrays[n] for n in fp.loaded_inputs], geom=geom)
-        dev0 = make_device(geom, n_data=fp.n_data_rows)
-        outs = run_waves(dev0, staged, encode(fp.program),
-                         fp.readback_rows)
+        if engine == "baseline":
+            staged, tiles, waves = stage_rows(
+                [arrays[n] for n in fp.loaded_inputs], geom=geom)
+            dev0 = make_device(geom, n_data=fp.n_data_rows)
+            outs = run_waves_baseline(dev0, staged, encode(fp.program),
+                                      fp.readback_rows)
+        else:
+            staged, tiles, waves = stage_rows(
+                [arrays[n] for n in fp.loaded_inputs], geom=geom,
+                mesh=mesh)
+            outs = run_waves(staged, fp.program, fp.readback_rows,
+                             n_rows=fp.template_rows, mesh=mesh)
         col = {row: i for i, row in enumerate(fp.readback_rows)}
         for name, row in fp.device_outputs:
             results[name] = outs[:, col[row]].reshape(-1)[:n_words]

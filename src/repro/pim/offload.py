@@ -79,26 +79,27 @@ _BYTES_MOVED = {"not": 2, "xnor2": 3, "xor2": 3, "maj3": 4, "add": 5,
 _TPU_PJ_PER_BYTE = 1.3
 
 
-def _simulate_schedule(op: str, n_bits: int, geom: DrimGeometry) -> Schedule:
+def _simulate_schedule(op: str, n_bits: int, geom: DrimGeometry,
+                       mesh=None) -> Schedule:
     """Execute the op on the functional fleet with random operands and
     return the measured schedule (cost-identical to `plan_schedule`, but
-    the AAP streams really ran)."""
+    the AAP streams really ran — sharded over `mesh` when given)."""
     from repro.pim.scheduler import random_operands
     n_words = -(-n_bits // WORD_BITS)
     args = random_operands(op, n_words, seed=n_bits & 0xFFFF)
-    _, sched = execute(op, *args, geom=geom, n_bits=n_bits)
+    _, sched = execute(op, *args, geom=geom, n_bits=n_bits, mesh=mesh)
     return sched
 
 
 def plan(op: OpName, n_bits: int, *, geom: DrimGeometry = DRIM_R,
          operands_in_dram: bool = True,
-         simulate: bool = False) -> OffloadReport:
+         simulate: bool = False, mesh=None) -> OffloadReport:
     if op not in OP_ARITY or op not in _BYTES_MOVED:
         raise ValueError(f"unknown bulk op {op!r}")
     if n_bits <= 0:
         raise ValueError("n_bits must be positive")
     simulated = simulate and n_bits <= SIMULATE_MAX_BITS
-    sched = (_simulate_schedule(op, n_bits, geom) if simulated
+    sched = (_simulate_schedule(op, n_bits, geom, mesh) if simulated
              else plan_schedule(op, n_bits, geom=geom))
     drim_lat = sched.latency_s
     drim_e = sched.energy_j
@@ -159,21 +160,22 @@ class FusedOffloadReport:
         return dataclasses.asdict(self)
 
 
-def _simulate_graph(graph: BulkGraph, n_bits: int,
-                    geom: DrimGeometry) -> FusedSchedule:
+def _simulate_graph(graph: BulkGraph, n_bits: int, geom: DrimGeometry,
+                    mesh=None) -> FusedSchedule:
     """Execute the fused graph on the functional fleet with seeded
     random feeds and return the measured schedule."""
     n_words = -(-n_bits // WORD_BITS)
     rng = np.random.default_rng(n_bits & 0xFFFF)
     feeds = {name: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
              for name in graph.input_names}
-    _, sched = execute_graph(graph, feeds, geom=geom, n_bits=n_bits)
+    _, sched = execute_graph(graph, feeds, geom=geom, n_bits=n_bits,
+                             mesh=mesh)
     return sched
 
 
 def plan_fused(graph: BulkGraph, n_bits: int, *,
                geom: DrimGeometry = DRIM_R,
-               simulate: bool = False) -> FusedOffloadReport:
+               simulate: bool = False, mesh=None) -> FusedOffloadReport:
     """Price a fused graph vs its unfused chain and the TPU.
 
     TPU model: intermediates stay in VMEM, so HBM traffic is the graph
@@ -181,7 +183,7 @@ def plan_fused(graph: BulkGraph, n_bits: int, *,
     bit-op per node per bit; energy charges DRAM access per byte moved.
     """
     simulated = simulate and n_bits <= SIMULATE_MAX_BITS
-    sched = (_simulate_graph(graph, n_bits, geom) if simulated
+    sched = (_simulate_graph(graph, n_bits, geom, mesh) if simulated
              else plan_graph_schedule(graph, n_bits, geom=geom))
 
     boundary_bytes = (sched.n_inputs + sched.n_outputs) * n_bits / 8.0

@@ -4,8 +4,22 @@ Takes a tensor-level op (xnor2 / xor2 / not / maj3 / add / copy over
 bit-packed uint32 operands of arbitrary size), tiles the operands into
 `row_bits`-wide rows, assigns tiles to (chip, bank, subarray) slots, and
 executes the batched AAP command stream wave by wave on the functional
-`DrimDevice` simulator — one vmapped `lax.scan` per wave, every active
-sub-array running the same Table-2 microprogram in lock-step.
+`DrimDevice` simulator, every active sub-array running the same Table-2
+microprogram in lock-step.
+
+Two wave engines share the staging/tiling/cost model:
+
+  * "resident" (default): operand tiles are staged device-resident in
+    one fused dispatch, the AAP stream runs trace-time-UNROLLED
+    (`isa.run_program_unrolled` — each wave touches only the rows the
+    program names, readback gathers only the result rows), the staged
+    buffer is donated to XLA for in-place reuse, and the whole loop can
+    be `shard_map`-sharded over a (chips, banks) `pim.mesh.fleet_mesh`.
+  * "baseline": the PR 2 loop — every wave rebuilds the full device
+    state and runs the encoded stream through the vmapped `lax.scan`
+    interpreter.  Kept as the reference the differential suite and
+    `benchmarks/fig_fleet.py` measure the resident/sharded paths
+    against (bit-exact, ~an order of magnitude slower at DRIM-S).
 
 Cost accounting is *measured from the executed stream*, not a separate
 closed form: `aaps_per_tile` is the length of the encoded program each
@@ -36,15 +50,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AAP, DRIM_R, DrimGeometry, cost, encode,
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+
+from repro.core import (AAP, DRIM_R, DrimGeometry, encode,
                         make_subarray, microprogram_add, microprogram_copy,
                         microprogram_maj3, microprogram_not,
-                        microprogram_xnor2, microprogram_xor2)
+                        microprogram_xnor2, microprogram_xor2,
+                        run_program_unrolled)
 from repro.core.device import (DrimDevice, device_load_rows,
                                device_read_rows, device_run_program,
                                make_device)
 from repro.core.energy import E_AAP_NJ_PER_KB
-from repro.core.subarray import WORD_BITS
+from repro.core.subarray import N_XROWS, WORD_BITS
 
 # Per-slot row layout: operands at word-lines [0, arity), results at the
 # word-lines listed here.  8 data rows are plenty for every Table-2 op.
@@ -102,6 +120,29 @@ def build_program(op: str) -> List[AAP]:
             "add": lambda: microprogram_add(t, 0, 1, 2, 3, 4),
         }[op]()
     return _PROGRAM_CACHE[op]
+
+
+# Encoded-program memo: `execute`/`plan_schedule` used to re-encode the
+# AAP stream (and re-measure its cost) on every call — pure waste, since
+# the program depends only on the op: Table-2 addresses are per-slot row
+# indices, identical for every geometry (the template is built from
+# N_DATA_ROWS and WORD_BITS, never from banks/chips/row_bits).  The
+# stats counter exists so tests can assert the hit path is taken.
+ENCODE_CACHE_STATS: collections.Counter = collections.Counter()
+_ENCODED_CACHE: Dict[str, Tuple[jax.Array, Tuple[AAP, ...], int]] = {}
+
+
+def encoded_program(op: str) -> Tuple[jax.Array, Tuple[AAP, ...], int]:
+    """Cached (encoded [n, 5] stream, program tuple, n_aaps) for `op`."""
+    hit = _ENCODED_CACHE.get(op)
+    if hit is not None:
+        ENCODE_CACHE_STATS["hits"] += 1
+        return hit
+    ENCODE_CACHE_STATS["misses"] += 1
+    prog = tuple(build_program(op))
+    out = (encode(prog), prog, len(prog))
+    _ENCODED_CACHE[op] = out
+    return out
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -180,13 +221,13 @@ def plan_schedule(op: str, n_bits: int, *,
     what `execute()` measures (same tiling, same program length)."""
     if n_bits <= 0:
         raise ValueError("n_bits must be positive")
-    prog = build_program(op)
+    _, _, n_aaps = encoded_program(op)
     tiles = _ceil_div(n_bits, geom.row_bits)
     slots = geom.n_subarrays
     return Schedule(
         op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
         slots=slots, waves=_ceil_div(tiles, slots),
-        aaps_per_tile=cost(prog)[0], chips=geom.chips, banks=geom.banks,
+        aaps_per_tile=n_aaps, chips=geom.chips, banks=geom.banks,
         subarrays_per_bank=geom.subarrays_per_bank, t_aap_s=geom.t_aap_s,
     )
 
@@ -200,22 +241,26 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 @functools.partial(jax.jit, static_argnames=("result_rows",))
-def run_waves(dev0: DrimDevice, staged: jax.Array, encoded: jax.Array,
-              result_rows: Tuple[int, ...]) -> jax.Array:
-    """Execute every wave of a staged payload in ONE traced computation.
+def run_waves_baseline(dev0: DrimDevice, staged: jax.Array,
+                       encoded: jax.Array,
+                       result_rows: Tuple[int, ...]) -> jax.Array:
+    """The PR 2 wave loop, kept as the differential/benchmark reference.
 
     staged: [waves, n_rows_in, chips, banks, subarrays, row_words] —
     wave w writes its [n_rows_in, ...] block into word-lines
-    [0, n_rows_in) of every slot (operands for the plain scheduler,
-    graph inputs for the fused path), runs the encoded AAP stream, and
-    reads back `result_rows`.  The wave axis is a `lax.map`: one trace,
-    one dispatch, regardless of wave count (waves only differ in data,
-    every slot state starts from `dev0`).
+    [0, n_rows_in) of every slot, runs the encoded AAP stream through
+    the vmapped `lax.scan` interpreter over the FULL device state, and
+    reads back `result_rows`.  Every wave starts from `dev0`, so each
+    wave re-materializes (and the interpreter re-copies) the whole
+    [chips, banks, subarrays, rows, words] stack — the host-staging hot
+    path `run_waves` removes.  `benchmarks/fig_fleet.py` measures the
+    two against each other and the sharded differential suite holds
+    them bit-identical.
 
     Returns [waves, len(result_rows), chips, banks, subarrays, row_words].
     """
     def one_wave(tiles: jax.Array) -> jax.Array:
-        TRACE_COUNTS["wave_body"] += 1
+        TRACE_COUNTS["wave_body_baseline"] += 1
         dev = device_load_rows(dev0, 0, jnp.moveaxis(tiles, 0, 3))
         out = device_run_program(dev, encoded)
         return device_read_rows(out, result_rows)
@@ -223,24 +268,106 @@ def run_waves(dev0: DrimDevice, staged: jax.Array, encoded: jax.Array,
     return jax.lax.map(one_wave, staged)
 
 
+@functools.lru_cache(maxsize=512)
+def _wave_runner(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
+                 n_rows: int, mesh, donate: bool):
+    """Compiled wave executor for one (program, readback, mesh) signature.
+
+    The program is a static argument: `run_program_unrolled` specializes
+    every AAP to its word-lines at trace time, so each wave touches ONLY
+    the rows the stream names — operand tiles arrive device-resident,
+    intermediates live as per-row values, and readback gathers just the
+    result rows instead of materializing the full device state.  With a
+    mesh, the wave body runs under `shard_map` over (chips, banks) with
+    no collectives; `donate=True` hands the staged buffer to XLA for
+    output reuse.
+    """
+    def body(staged: jax.Array) -> jax.Array:
+        TRACE_COUNTS["wave_body"] += 1
+        zeros = jnp.zeros(staged.shape[2:], jnp.uint32)
+
+        def one_wave(tiles: jax.Array) -> jax.Array:
+            rows = {wl: tiles[wl] for wl in range(tiles.shape[0])}
+            rows, dcc = run_program_unrolled(program, rows, {},
+                                             n_rows=n_rows, zeros=zeros)
+            return jnp.stack([rows.get(r, zeros) for r in result_rows])
+
+        return jax.lax.map(one_wave, staged)
+
+    fn = body
+    if mesh is not None:
+        from repro.pim.mesh import STAGED_SPEC
+        fn = shard_map(body, mesh=mesh, in_specs=(STAGED_SPEC,),
+                       out_specs=STAGED_SPEC, check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def run_waves(staged: jax.Array, program: Sequence[AAP],
+              result_rows: Tuple[int, ...], *, n_rows: int,
+              mesh=None) -> jax.Array:
+    """Execute every wave of a staged payload in ONE traced computation.
+
+    staged: [waves, n_rows_in, chips, banks, subarrays, row_words] —
+    wave w holds its [n_rows_in, ...] tile block in word-lines
+    [0, n_rows_in) (operands for the plain scheduler, graph inputs for
+    the fused path).  `program` is the host-side AAP stream whose
+    addresses were resolved against a template with `n_rows` total
+    normal rows (addresses >= n_rows are DCC word-lines); it executes
+    unrolled — see `_wave_runner`.  Waves are independent (each starts
+    from a fresh sub-array; every live row is written before it is
+    read), so the wave axis is one `lax.map`: one trace, one dispatch,
+    regardless of wave count.
+
+    The staged buffer is DONATED to XLA whenever the output tile block
+    has the same shape (len(result_rows) == n_rows_in), letting the
+    readback reuse the operand memory in place of a fresh allocation.
+    `mesh` (from `pim.mesh.fleet_mesh`) runs the whole loop under
+    `shard_map` over (chips, banks).
+
+    Returns [waves, len(result_rows), chips, banks, subarrays, row_words].
+    """
+    donate = len(result_rows) == staged.shape[1]
+    runner = _wave_runner(tuple(program), tuple(result_rows), n_rows,
+                          mesh, donate)
+    return runner(staged)
+
+
+@functools.lru_cache(maxsize=512)
+def _stager(n_arrays: int, n_words: int, lead: Tuple[int, ...], mesh):
+    """Compiled staging kernel: pad + tile every operand in one fused
+    dispatch, leaving the result device-resident (and shard-aligned on
+    `mesh`) instead of round-tripping per-array pads through separate
+    eager kernels."""
+    pad = lead[0] * lead[1] * lead[2] * lead[3] * lead[4] - n_words
+
+    def impl(arrays: Tuple[jax.Array, ...]) -> jax.Array:
+        return jnp.stack([jnp.pad(jnp.asarray(a, jnp.uint32), (0, pad))
+                          .reshape(lead) for a in arrays], axis=1)
+
+    shardings = None
+    if mesh is not None:
+        from repro.pim.mesh import STAGED_SPEC
+        shardings = NamedSharding(mesh, STAGED_SPEC)
+    return jax.jit(impl, out_shardings=shardings)
+
+
 def stage_rows(arrays: Sequence[jax.Array], *, geom: DrimGeometry,
-               ) -> Tuple[jax.Array, int, int]:
+               mesh=None) -> Tuple[jax.Array, int, int]:
     """Tile flat word arrays onto the fleet: pad to a whole number of
     waves and reshape to [waves, n_arrays, chips, banks, subarrays,
-    row_words].  Returns (staged, tiles, waves)."""
+    row_words], device-resident (shard-aligned over `mesh` when given).
+    Returns (staged, tiles, waves)."""
     n_words = arrays[0].shape[0]
     row_w = geom.row_bits // WORD_BITS
     tiles = _ceil_div(n_words, row_w)
     waves = _ceil_div(tiles, geom.n_subarrays)
-    pad = waves * geom.n_subarrays * row_w - n_words
     lead = (waves, geom.chips, geom.banks, geom.subarrays_per_bank, row_w)
-    staged = jnp.stack(
-        [jnp.pad(a, (0, pad)).reshape(lead) for a in arrays], axis=1)
+    staged = _stager(len(arrays), n_words, lead, mesh)(tuple(arrays))
     return staged, tiles, waves
 
 
 def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
-            n_bits: int | None = None,
+            n_bits: int | None = None, mesh=None, engine: str = "resident",
             ) -> Tuple[Tuple[jax.Array, ...], Schedule]:
     """Run a bulk op through the simulated device fleet.
 
@@ -249,12 +376,21 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
     marks a ragged bit tail (the tail is still computed, the cost model
     tiles by words either way).  Returns one result array per
     RESULT_ROWS[op] entry, each of length W, plus the measured Schedule.
+
+    engine="resident" (default) stages device-resident tiles and runs
+    the trace-time-unrolled wave loop (optionally `shard_map`-sharded
+    over a `pim.mesh.fleet_mesh`); engine="baseline" is the PR 2 path
+    (full device state through the vmapped scan interpreter, no mesh) —
+    kept so benchmarks and differential tests can pin the two against
+    each other.
     """
     arity = OP_ARITY.get(op)
     if arity is None:
         raise ValueError(f"unknown bulk op {op!r}")
     if len(operands) != arity:
         raise ValueError(f"{op} takes {arity} operands, got {len(operands)}")
+    if engine not in ("resident", "baseline"):
+        raise ValueError(f"unknown engine {engine!r}")
     ops = [jnp.asarray(x, jnp.uint32).reshape(-1) for x in operands]
     n_words = ops[0].shape[0]
     if any(o.shape[0] != n_words for o in ops):
@@ -264,19 +400,24 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
     if not 0 < n_bits <= n_words * WORD_BITS:
         raise ValueError("n_bits out of range for the given operands")
 
-    staged, tiles, waves = stage_rows(ops, geom=geom)
-    slots = geom.n_subarrays
-
-    dev0 = make_device(geom, n_data=N_DATA_ROWS)
-    enc = encode(build_program(op))
-    outs = run_waves(dev0, staged, enc, tuple(RESULT_ROWS[op]))
-    # [waves, n_res, c, b, s, row_w] -> flat wave-major order per result
+    enc, prog, n_aaps = encoded_program(op)
+    result_rows = tuple(RESULT_ROWS[op])
+    if engine == "baseline":
+        staged, tiles, waves = stage_rows(ops, geom=geom)
+        dev0 = make_device(geom, n_data=N_DATA_ROWS)
+        outs = run_waves_baseline(dev0, staged, enc, result_rows)
+    else:
+        staged, tiles, waves = stage_rows(ops, geom=geom, mesh=mesh)
+        outs = run_waves(staged, prog, result_rows,
+                         n_rows=N_DATA_ROWS + N_XROWS, mesh=mesh)
+    # [waves, n_res, c, b, s, row_w] -> flat wave-major order per result;
+    # only the n_words result words of assigned tiles leave the device.
     results = tuple(outs[:, i].reshape(-1)[:n_words]
-                    for i in range(len(RESULT_ROWS[op])))
+                    for i in range(len(result_rows)))
 
     sched = Schedule(
         op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
-        slots=slots, waves=waves, aaps_per_tile=int(enc.shape[0]),
+        slots=geom.n_subarrays, waves=waves, aaps_per_tile=n_aaps,
         chips=geom.chips, banks=geom.banks,
         subarrays_per_bank=geom.subarrays_per_bank, t_aap_s=geom.t_aap_s,
     )
@@ -284,7 +425,8 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
 
 
 def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
-                   geom: DrimGeometry = DRIM_R,
+                   geom: DrimGeometry = DRIM_R, mesh=None,
+                   engine: str = "resident",
                    ) -> List[Tuple[Tuple[jax.Array, ...], Schedule]]:
     """Run an op list [(op, operands), ...] back-to-back on the same
     fleet; total latency/energy is the sum over schedules.
@@ -295,4 +437,5 @@ def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
     compile the whole DAG into one resident AAP stream; the
     differential suite holds the two paths bit-identical.
     """
-    return [execute(op, *args, geom=geom) for op, args in ops]
+    return [execute(op, *args, geom=geom, mesh=mesh, engine=engine)
+            for op, args in ops]

@@ -123,6 +123,30 @@ def test_acceptance_stack_shape(small_geom, filled_device):
     assert filled_device.row_bits == small_geom.row_bits
 
 
+def test_device_run_program_donation_reuses_buffers(small_geom):
+    """Satellite acceptance: donate=True hands the device state to XLA —
+    the input buffers are invalidated and the output state occupies the
+    SAME memory (no full [chips, banks, subarrays, rows, words] copy)."""
+    rng = np.random.default_rng(0xD0)
+    rows = rng.integers(0, 1 << 32, (2, 4, 8, 3, 2), dtype=np.uint32)
+    prog = microprogram_xnor2(
+        device_template(make_device(small_geom, n_data=N_DATA)), 0, 1, 2)
+
+    dev = device_load_rows(make_device(small_geom, n_data=N_DATA), 0,
+                           jnp.asarray(rows))
+    want = device_run_program(dev, encode(prog))     # default: dev intact
+    assert not dev.data.is_deleted()
+
+    ptr = dev.data.unsafe_buffer_pointer()
+    out = device_run_program(dev, encode(prog), donate=True)
+    assert dev.data.is_deleted()
+    assert out.data.unsafe_buffer_pointer() == ptr
+    np.testing.assert_array_equal(np.asarray(out.data),
+                                  np.asarray(want.data))
+    np.testing.assert_array_equal(np.asarray(out.dcc),
+                                  np.asarray(want.dcc))
+
+
 @settings(max_examples=6, deadline=None)
 @given(st.integers(0, 2**32 - 1))
 def test_property_random_data_equivalence(seed):

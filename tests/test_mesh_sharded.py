@@ -1,0 +1,181 @@
+"""Sharded fleet execution: shard_map path bit-exact vs the vmap path.
+
+The (chips, banks) fleet mesh is pure data parallelism — no collectives
+— so the sharded executor must agree with the single-device vmap path
+bit for bit on everything: single programs (`device_run_program_sharded`
+vs `device_run_program`), bulk ops (`execute(mesh=...)` vs the PR 2
+"baseline" engine), and whole fused DAGs (the random-DAG differential
+suite from `tests/test_graph.py` re-run through the sharded executor).
+
+On a bare CPU runner the fleet mesh degrades to 1x1 (the fallback that
+keeps tier-1 green); a subprocess test re-runs this module under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so real 1xN /
+2x4 partitioning is exercised even locally, and the CI job sets the
+same flag to run it in-process.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from test_graph import GEOMS, random_graph
+
+from repro.core import DrimGeometry, encode
+from repro.core.device import (device_load_rows, device_run_program,
+                               device_run_program_sharded, make_device)
+from repro.pim import (OP_ARITY, build_program, execute, execute_graph,
+                       expected_results, fleet_mesh, fleet_shape,
+                       graph_ref_results, random_operands, shard_device,
+                       shard_staged, stage_rows)
+
+MULTI_DEVICE = len(jax.devices()) >= 8
+
+
+def test_fleet_shape_divides_geometry():
+    """The mesh shape always divides (chips, banks) exactly and never
+    exceeds the device count; one device means the 1x1 fallback."""
+    geom = DrimGeometry(chips=2, banks=4, subarrays_per_bank=8)
+    for n_dev in (1, 2, 3, 4, 6, 8, 16):
+        mc, mb = fleet_shape(geom, n_dev)
+        assert geom.chips % mc == 0 and geom.banks % mb == 0
+        assert mc * mb <= n_dev
+    assert fleet_shape(geom, 1) == (1, 1)
+    assert fleet_shape(geom, 8) == (2, 4)
+    # ties prefer the banks axis (how DRIM-S scales out)
+    assert fleet_shape(geom, 4) == (1, 4)
+    # no dividing shape fits 2 devices for 1 chip x 3 banks -> fallback
+    assert fleet_shape(DrimGeometry(chips=1, banks=3), 2) == (1, 1)
+    assert fleet_shape(DrimGeometry(chips=1, banks=3), 3) == (1, 3)
+
+
+def test_fleet_mesh_axes_and_fallback(small_geom):
+    mesh = fleet_mesh(small_geom)
+    assert mesh.axis_names == ("chips", "banks")
+    assert small_geom.chips % mesh.shape["chips"] == 0
+    assert small_geom.banks % mesh.shape["banks"] == 0
+    if len(jax.devices()) == 1:
+        assert dict(mesh.shape) == {"chips": 1, "banks": 1}
+
+
+@pytest.mark.skipif(not MULTI_DEVICE, reason="needs >= 8 devices")
+def test_fleet_mesh_uses_all_forced_devices(small_geom):
+    mesh = fleet_mesh(small_geom)
+    assert dict(mesh.shape) == {"chips": 2, "banks": 4}
+
+
+def test_device_run_program_sharded_matches_vmap(small_geom):
+    """Same encoded stream, full post-state equality (data AND dcc)."""
+    rng = np.random.default_rng(0xD1)
+    dev = make_device(small_geom, n_data=8)
+    rows = rng.integers(0, 1 << 32,
+                        (dev.chips, dev.banks, dev.subarrays, 3, dev.words),
+                        dtype=np.uint32)
+    dev = device_load_rows(dev, 0, rows)
+    mesh = fleet_mesh(small_geom)
+    dev = shard_device(dev, mesh)
+    for op in ("xnor2", "add"):
+        enc = encode(build_program(op))
+        ref = device_run_program(dev, enc)
+        out = device_run_program_sharded(dev, enc, mesh)
+        np.testing.assert_array_equal(np.asarray(out.data),
+                                      np.asarray(ref.data))
+        np.testing.assert_array_equal(np.asarray(out.dcc),
+                                      np.asarray(ref.dcc))
+
+
+def test_execute_sharded_bit_exact_all_ops(small_geom):
+    """Every bulk op through the sharded path == oracle == baseline
+    engine, including a ragged multi-wave payload."""
+    mesh = fleet_mesh(small_geom)
+    row_w = small_geom.row_bits // 32
+    n_words = 2 * small_geom.n_subarrays * row_w + 3
+    for op in sorted(OP_ARITY):
+        args = random_operands(op, n_words, seed=sum(map(ord, op)))
+        res_m, sched_m = execute(op, *args, geom=small_geom, mesh=mesh)
+        res_b, sched_b = execute(op, *args, geom=small_geom,
+                                 engine="baseline")
+        assert sched_m == sched_b
+        for got, base, want in zip(res_m, res_b, expected_results(op, args)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+            np.testing.assert_array_equal(np.asarray(base),
+                                          np.asarray(want))
+
+
+def test_shard_staged_alignment(small_geom):
+    """stage_rows(mesh=...) places tiles shard-aligned — same layout the
+    wave runner's in_specs declare, so no resharding on dispatch."""
+    from jax.sharding import NamedSharding
+
+    from repro.pim import STAGED_SPEC
+    mesh = fleet_mesh(small_geom)
+    a, b = random_operands("xnor2", 64, seed=5)
+    staged, _, _ = stage_rows([a, b], geom=small_geom, mesh=mesh)
+    assert staged.sharding == NamedSharding(mesh, STAGED_SPEC)
+    again = shard_staged(staged, mesh)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(staged))
+
+
+def test_shard_device_rejects_indivisible():
+    geom = DrimGeometry(chips=1, banks=3, subarrays_per_bank=2, row_bits=32)
+    dev = make_device(geom, n_data=4)
+    mesh = fleet_mesh(DrimGeometry(chips=2, banks=4, subarrays_per_bank=2))
+    if dict(mesh.shape) == {"chips": 1, "banks": 1}:
+        pytest.skip("single device: every shape divides a 1x1 mesh")
+    with pytest.raises(ValueError):
+        shard_device(dev, mesh)
+
+
+def test_random_dag_sharded_differential(n_examples):
+    """ISSUE acceptance: the random-DAG suite from tests/test_graph.py
+    through the sharded executor, bit-exact vs the vmap path AND the
+    numpy oracle, with identical measured schedules."""
+    for seed in range(n_examples):
+        rng = np.random.default_rng(0x5EED + seed)
+        graph = random_graph(rng)
+        geom = GEOMS[int(rng.integers(0, len(GEOMS)))]
+        mesh = fleet_mesh(geom)
+        row_w = geom.row_bits // 32
+        max_words = 2 * geom.n_subarrays * row_w + 3
+        n_words = int(rng.integers(1, max_words + 1))
+        feeds = {name: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+                 for name in graph.input_names}
+
+        sharded, sched_s = execute_graph(graph, feeds, geom=geom, mesh=mesh)
+        vmap_path, sched_v = execute_graph(graph, feeds, geom=geom,
+                                           engine="baseline")
+        ref = graph_ref_results(graph, feeds)
+        assert set(sharded) == set(vmap_path) == set(ref)
+        for name in ref:
+            np.testing.assert_array_equal(np.asarray(sharded[name]),
+                                          ref[name])
+            np.testing.assert_array_equal(np.asarray(vmap_path[name]),
+                                          ref[name])
+        assert sched_s == sched_v
+
+
+def test_forced_8device_cpu_mesh_subprocess(fast_mode):
+    """Run this module's differential tests on a REAL 1xN partitioning:
+    a fresh interpreter with XLA_FLAGS forcing 8 CPU devices (the flag
+    must be set before jax initializes, hence the subprocess).  The CI
+    job runs the same configuration in-process."""
+    if MULTI_DEVICE:
+        pytest.skip("already running with forced multi-device platform")
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        REPRO_FAST_TESTS="1",
+    )
+    cmd = [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+           os.path.abspath(__file__), "-k", "not subprocess"]
+    proc = subprocess.run(
+        cmd, env=env, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, (
+        f"forced-8-device suite failed:\n{proc.stdout}\n{proc.stderr}")
+    assert "passed" in proc.stdout

@@ -167,3 +167,69 @@ def test_execute_validates_inputs(small_geom):
         execute("xnor2", a, b[:2], geom=small_geom)  # length mismatch
     with pytest.raises(ValueError):
         execute("xnor2", a, b, geom=small_geom, n_bits=4 * 32 + 1)
+    with pytest.raises(ValueError):
+        execute("xnor2", a, b, geom=small_geom, engine="warp")
+
+
+def test_resident_engine_matches_baseline(small_geom):
+    """The trace-time-unrolled resident engine and the PR 2 full-state
+    scan loop produce identical results AND identical schedules on a
+    ragged multi-wave payload, for every op."""
+    row_w = small_geom.row_bits // 32
+    n_words = 2 * small_geom.n_subarrays * row_w + 5
+    for op in sorted(OP_ARITY):
+        args = random_operands(op, n_words, seed=len(op))
+        res_r, sched_r = execute(op, *args, geom=small_geom)
+        res_b, sched_b = execute(op, *args, geom=small_geom,
+                                 engine="baseline")
+        assert sched_r == sched_b
+        for got, base in zip(res_r, res_b):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(base))
+
+
+def test_encoded_program_cache_hits():
+    """Satellite acceptance: the encoded AAP stream is memoized per op —
+    repeated plan_schedule/execute calls hit the cache instead of
+    re-encoding, and hits return the very same array object."""
+    from repro.pim.scheduler import ENCODE_CACHE_STATS, encoded_program
+
+    enc0, prog0, n0 = encoded_program("maj3")
+    hits0 = ENCODE_CACHE_STATS["hits"]
+    misses0 = ENCODE_CACHE_STATS["misses"]
+    enc1, prog1, n1 = encoded_program("maj3")
+    assert ENCODE_CACHE_STATS["hits"] == hits0 + 1
+    assert ENCODE_CACHE_STATS["misses"] == misses0
+    assert enc1 is enc0 and prog1 is prog0 and n1 == n0 == 4
+
+    plan_schedule("maj3", 10_000)
+    plan_schedule("maj3", 20_000)
+    assert ENCODE_CACHE_STATS["misses"] == misses0
+    assert ENCODE_CACHE_STATS["hits"] == hits0 + 3
+
+
+def test_run_waves_donates_staged_buffer(small_geom):
+    """Satellite acceptance: the staged operand buffer is donated to XLA
+    and its memory is reused for the readback when shapes allow (copy:
+    one operand row in, one result row out)."""
+    from repro.core.subarray import N_XROWS
+    from repro.pim.scheduler import N_DATA_ROWS, run_waves, stage_rows
+
+    a = random_operands("copy", 3 * small_geom.n_subarrays *
+                        (small_geom.row_bits // 32) + 5, seed=9)[0]
+    staged, _, _ = stage_rows([a], geom=small_geom)
+    ptr = staged.unsafe_buffer_pointer()
+    outs = run_waves(staged, tuple(build_program("copy")), (1,),
+                     n_rows=N_DATA_ROWS + N_XROWS)
+    assert staged.is_deleted()                       # donated away
+    assert outs.unsafe_buffer_pointer() == ptr       # memory reused
+    np.testing.assert_array_equal(
+        np.asarray(outs[:, 0].reshape(-1)[:a.shape[0]]), a)
+
+    # Shapes that cannot alias (2 operand rows -> 1 result row) must
+    # keep the input alive rather than donating into thin air.
+    b, c = random_operands("xnor2", 40, seed=3)
+    staged2, _, _ = stage_rows([b, c], geom=small_geom)
+    run_waves(staged2, tuple(build_program("xnor2")), (2,),
+              n_rows=N_DATA_ROWS + N_XROWS)
+    assert not staged2.is_deleted()
