@@ -8,6 +8,8 @@ Runs:
     fig_fusion          fusion  — fused graphs vs unfused op chains
     fig_fleet           fleet   — weak-scaling sweep, vmap vs shard_map
                                   vs donated execution paths
+    fig_queue           queue   — per-bank async command queues: SIMD
+                                  ripple vs MIMD carry-save popcount
     table3_reliability  Table 3 — Monte-Carlo process-variation error
     roofline            brief   — 3-term roofline from the dry-run
     kernel_adjusted     brief   — kernel-adjusted memory roofline
@@ -28,7 +30,7 @@ import sys
 import traceback
 
 from benchmarks import (fig8_throughput, fig9_energy, fig_fleet,
-                        fig_fusion, kernel_adjusted, record,
+                        fig_fusion, fig_queue, kernel_adjusted, record,
                         table3_reliability, roofline)
 
 MODULES = (
@@ -36,6 +38,7 @@ MODULES = (
     ("fig9_energy", fig9_energy),
     ("fig_fusion", fig_fusion),
     ("fig_fleet", fig_fleet),
+    ("fig_queue", fig_queue),
     ("table3_reliability", table3_reliability),
     ("roofline", roofline),
     ("kernel_adjusted", kernel_adjusted),

@@ -8,7 +8,7 @@ from .subarray import (SubArray, make_subarray, load_rows, activate_read,
                        pack_bits, unpack_bits, WORD_BITS)
 from .isa import (AAP, OP_COPY, OP_COPY2, OP_DRA, OP_TRA, encode, cost,
                   run_program, run_program_py, run_program_unrolled,
-                  AAP_COUNTS,
+                  AAP_COUNTS, CMDS_PER_AAP, simulate_bus_issue,
                   microprogram_copy, microprogram_not, microprogram_maj3,
                   microprogram_min3, microprogram_xnor2, microprogram_xor2,
                   microprogram_add, multibit_add_program)
@@ -16,11 +16,12 @@ from .device import (MESH_AXES, DrimDevice, make_device, device_template,
                      device_load_rows, device_broadcast_rows,
                      device_read_row, device_read_rows,
                      device_read_row_window, device_run_program,
-                     device_run_program_sharded)
+                     device_run_program_banked, device_run_program_sharded)
 from .analog import (AnalogParams, dra_analog, tra_analog,
                      monte_carlo_error_rates, PAPER_TABLE3)
 from .timing import (DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits,
-                     drim_latency_s, area_report, T_AAP_S)
+                     drim_latency_s, area_report, T_AAP_S, T_CMD_S,
+                     CMD_SLOTS_PER_AAP, DDR4_BW_BYTES_S)
 from .platforms import all_platforms, Platform, PAPER_CLAIMS, CONTEXT_CLAIMS
 from .energy import (energy_table, pim_energy_nj_per_kb,
                      cpu_energy_nj_per_kb, ddr4_copy_energy_nj_per_kb,

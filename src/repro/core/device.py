@@ -189,6 +189,34 @@ def device_run_program(dev: DrimDevice, encoded: jax.Array, *,
     return _device_run_program(dev, encoded)
 
 
+def device_run_program_banked(dev: DrimDevice, encoded_by_block,
+                              bank_blocks) -> DrimDevice:
+    """MIMD over the bank axis: a DIFFERENT encoded stream per bank block.
+
+    bank_blocks: sequence of (lo, hi) pairs partitioning [0, banks) into
+    contiguous blocks; block i runs `encoded_by_block[i]` on its
+    [chips, hi-lo, subarrays] slice through the same vmapped scan
+    interpreter as `device_run_program`.  This is the full-state
+    reference the per-bank queue engine (`pim/queue.py`) is held
+    bit-identical to in the differential suite — each block has its own
+    program counter, blocks advance independently.
+    """
+    if len(encoded_by_block) != len(bank_blocks):
+        raise ValueError("one encoded stream per bank block required")
+    cover = [b for lo, hi in bank_blocks for b in range(lo, hi)]
+    if cover != list(range(dev.banks)):
+        raise ValueError(f"bank blocks {list(bank_blocks)} do not "
+                         f"partition [0, {dev.banks})")
+    datas, dccs = [], []
+    for (lo, hi), enc in zip(bank_blocks, encoded_by_block):
+        block = DrimDevice(data=dev.data[:, lo:hi], dcc=dev.dcc[:, lo:hi])
+        out = _device_run_program(block, enc)
+        datas.append(out.data)
+        dccs.append(out.dcc)
+    return DrimDevice(data=jnp.concatenate(datas, axis=1),
+                      dcc=jnp.concatenate(dccs, axis=1))
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_program_runner(mesh):
     spec = P(*MESH_AXES)

@@ -28,6 +28,21 @@ from .isa import AAP_COUNTS
 
 T_AAP_S = 90e-9  # seconds per AAP (ACT-ACT-PRE envelope)
 
+# Per-bank command-queue model (pim/queue.py).  The per-channel command
+# bus issues one command per slot at the DDR4-2400 command clock
+# (1200 MHz); an AAP consumes `isa.CMDS_PER_AAP` = 3 slots (ACT, ACT,
+# PRE) out of the ~108 its 90 ns envelope spans, so ~36 banks can issue
+# concurrently before the bus saturates — DRIM-R's 8 banks never stall,
+# DRIM-S's 256 banks contend, which is exactly the effect the queue
+# cost model measures.
+T_CMD_S = 1.0 / 1.2e9
+CMD_SLOTS_PER_AAP = round(T_AAP_S / T_CMD_S)          # = 108
+
+# Host DMA bandwidth in/out of the DIMM: x64 DDR4-2400 peak.  The queue
+# engine overlaps this with AAP compute (double-buffered waves); the
+# SIMD engines serialize it.
+DDR4_BW_BYTES_S = 19.2e9
+
 
 @dataclasses.dataclass(frozen=True)
 class DrimGeometry:

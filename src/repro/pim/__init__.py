@@ -1,18 +1,27 @@
 """Processing-in-memory layer: bulk-op scheduling over the simulated
 DRIM fleet (`scheduler`), the (chips, banks) fleet mesh for sharded
 simulation (`mesh`), fused dataflow graphs with resident intermediates
-(`graph`, `bnn`), and the DRIM-vs-TPU placement planner (`offload`)."""
-from .scheduler import (OP_ARITY, REF_OP, RESULT_ROWS, Schedule,
-                        build_program, encoded_program, execute,
-                        execute_oplist, expected_results, plan_schedule,
-                        random_operands, run_waves, run_waves_baseline,
-                        stage_rows)
+(`graph`, `bnn`), per-bank async command queues with MIMD graph
+partitioning (`queue`), and the DRIM-vs-TPU placement planner
+(`offload`)."""
+from .scheduler import (ENGINES, OP_ARITY, REF_OP, RESULT_ROWS, Schedule,
+                        build_program, dispatch_waves, encoded_program,
+                        execute, execute_oplist, expected_results,
+                        plan_schedule, random_operands, run_waves,
+                        run_waves_baseline, stage_rows, wave_fn)
 from .mesh import (DEVICE_SPEC, STAGED_SPEC, fleet_mesh, fleet_shape,
                    shard_device, shard_staged)
-from .graph import (BulkGraph, FusedProgram, FusedSchedule, ValueRef,
-                    compile_graph, execute_graph, graph_ref_results,
+from .graph import (BulkGraph, FusedProgram, FusedSchedule, GraphPartition,
+                    QueueSegment, ValueRef, compile_graph, execute_graph,
+                    graph_ref_results, partition_graph,
                     plan_graph_schedule)
-from .bnn import (bnn_dot_drim, bnn_dot_graph, counter_bits,
-                  decode_counts, stage_bnn_planes)
-from .offload import (FusedOffloadReport, OffloadReport, plan, plan_fused,
-                      plan_model_payloads)
+from .queue import (QueueSchedule, bank_blocks, default_n_queues,
+                    execute_partitioned, fused_queue_schedule,
+                    plan_partitioned_schedule, plan_queued_schedule,
+                    queue_mesh, run_waves_queued, stage_rows_queued,
+                    uniform_queue_schedule)
+from .bnn import (bnn_dot_drim, bnn_dot_graph, bnn_dot_graph_carrysave,
+                  bnn_dot_partitioned, counter_bits, decode_counts,
+                  stage_bnn_planes)
+from .offload import (FusedOffloadReport, OffloadReport, QueuedOffloadReport,
+                      plan, plan_fused, plan_model_payloads, plan_queued)

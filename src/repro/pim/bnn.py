@@ -4,26 +4,38 @@ The dominant consumer of bulk X(N)OR is the binarized matmul
 (`kernels/xnor_popcount.py`):  C[m,n] = 2*popcount(XNOR(a, b)) - K.  On
 DRIM the natural layout is *vertical* (bit-serial): lane ℓ — one bit-line
 position across the fleet's rows — holds one output element (m, n), and
-row k holds bit k of every lane's operand pair.  The fused graph is then
+row k holds bit k of every lane's operand pair.  Two popcount dataflows:
 
-    for k in 0..K-1:   p_k = xnor2(a_k, b_k)          # 1 AAP (fused DRA)
-                       counter += p_k                  # ripple-carry
+  * RIPPLE (PR 2, `bnn_dot_graph`):
 
-where the counter is ceil(log2(K+1)) resident bit-plane rows and each
-accumulate is a chain of Table-2 `add` bit-slices (7 AAPs each) rippling
-the carry upward, third operand a constant-zero row.  The whole thing —
-K XNORs + K ripple accumulates — is ONE AAP stream per slot; the 2K+1
-operand planes are loaded once per tile and only the counter planes are
-read back, which is exactly the operand-locality win the paper claims
-for in-situ X(N)OR chains.
+        for k in 0..K-1:   p_k = xnor2(a_k, b_k)      # 1 AAP (fused DRA)
+                           counter += p_k             # ripple-carry
 
-`bnn_dot_drim()` runs it end-to-end on the simulator and returns the
-int32 dot products, bit-exact vs `kernels/ref.py:xnor_gemm_ref`.
+    with a ceil(log2(K+1))-plane resident counter — every plane costs a
+    FULL ripple (nbits Table-2 `add` slices, 7 AAPs each), so the
+    stream grows as K * (1 + 7*nbits).
+
+  * CARRY-SAVE (`bnn_dot_graph_carrysave`): a 3:2-compressor counter
+    network.  A Table-2 full adder takes THREE weight-w planes and
+    produces one weight-w sum plus one weight-(w+1) carry, so each
+    adder retires a whole plane instead of one counter bit: the K XNOR
+    planes compress level by level until every weight holds a single
+    plane — the binary popcount.  ~K adders total (vs K*nbits), and the
+    tree exposes graph-level parallelism the ripple chain cannot:
+    `pim.queue.execute_partitioned` runs disjoint subtrees on different
+    bank queues concurrently (MIMD), shrinking the critical path again.
+
+Either way the whole thing is ONE AAP stream per slot (or one per bank
+queue); the 2K+1 operand planes are loaded once per tile and only the
+counter planes are read back — the operand-locality win the paper
+claims for in-situ X(N)OR chains.  `bnn_dot_drim()` runs it end-to-end
+on the simulator and returns the int32 dot products, bit-exact vs
+`kernels/ref.py:xnor_gemm_ref`.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -65,6 +77,51 @@ def bnn_dot_graph(k_bits: int) -> BulkGraph:
     for i in range(nbits):
         g.output(f"c{i}", acc[i])
     return g
+
+
+def bnn_dot_graph_carrysave(k_bits: int) -> Tuple[BulkGraph, int]:
+    """Carry-save 3:2-compressor tree popcount over K bit-plane inputs.
+
+    Same inputs/outputs as `bnn_dot_graph` (a0.., b0.., `zero`; counter
+    planes c0..c{nbits-1}), different dataflow: the K XNOR planes sit at
+    weight 0; while any weight level holds >= 3 planes a full adder
+    compresses three into sum (same weight) + carry (next weight), a
+    final half adder (`add` with the zero plane) settles levels left
+    with two.  Every level ends with exactly one plane — bit w of the
+    popcount.  Returns (graph, nbits); nbits always equals
+    `counter_bits(k_bits)` (the tree computes the exact sum, and its
+    level count is the binary width of K).
+    """
+    if k_bits < 1:
+        raise ValueError("k_bits must be positive")
+    g = BulkGraph()
+    a = [g.input(f"a{k}") for k in range(k_bits)]
+    b = [g.input(f"b{k}") for k in range(k_bits)]
+    zero = g.input("zero")
+    levels: List[List] = [[g.op("xnor2", a[k], b[k])
+                           for k in range(k_bits)]]
+    w = 0
+    while w < len(levels):
+        vals = levels[w]
+        carries: List = []
+        while len(vals) >= 3:
+            s, c = g.op("add", vals[0], vals[1], vals[2])
+            vals = vals[3:] + [s]
+            carries.append(c)
+        if len(vals) == 2:
+            s, c = g.op("add", vals[0], vals[1], zero)
+            vals = [s]
+            carries.append(c)
+        levels[w] = vals
+        if carries:
+            if w + 1 < len(levels):
+                levels[w + 1].extend(carries)
+            else:
+                levels.append(carries)
+        w += 1
+    for i, vals in enumerate(levels):
+        g.output(f"c{i}", vals[0])
+    return g, len(levels)
 
 
 def stage_bnn_planes(a_bits: np.ndarray, b_bits: np.ndarray,
@@ -110,16 +167,55 @@ def decode_counts(outs: Dict[str, jax.Array], nbits: int,
 
 def bnn_dot_drim(a_bits: np.ndarray, b_bits: np.ndarray, *,
                  geom: DrimGeometry = DRIM_R,
+                 accumulate: str = "ripple", engine: str = "resident",
+                 mesh=None, n_queues: Optional[int] = None,
                  ) -> Tuple[np.ndarray, FusedSchedule]:
     """Full fused BNN dot-product on the simulated fleet.
 
     a_bits [M, K], b_bits [N, K] sign bits in {0, 1}.  Returns
     (C [M, N] int32 with C = 2*popcount(XNOR) - K, schedule).
+
+    `accumulate` picks the popcount dataflow: "ripple" (the PR 2
+    counter) or "carrysave" (the 3:2-compressor tree — strictly fewer
+    AAPs on the critical path); `engine`/`mesh`/`n_queues` thread
+    through to `execute_graph`.
     """
     m, k_bits = a_bits.shape
     n = b_bits.shape[0]
-    graph = bnn_dot_graph(k_bits)
+    if accumulate == "ripple":
+        graph, nbits = bnn_dot_graph(k_bits), counter_bits(k_bits)
+    elif accumulate == "carrysave":
+        graph, nbits = bnn_dot_graph_carrysave(k_bits)
+    else:
+        raise ValueError(f"unknown accumulate mode {accumulate!r}")
     feeds, lanes = stage_bnn_planes(a_bits, b_bits)
-    outs, sched = execute_graph(graph, feeds, geom=geom, n_bits=lanes)
-    count = decode_counts(outs, counter_bits(k_bits), lanes)
+    outs, sched = execute_graph(graph, feeds, geom=geom, n_bits=lanes,
+                                engine=engine, mesh=mesh,
+                                n_queues=n_queues)
+    count = decode_counts(outs, nbits, lanes)
+    return (2 * count - k_bits).reshape(m, n), sched
+
+
+def bnn_dot_partitioned(a_bits: np.ndarray, b_bits: np.ndarray, *,
+                        geom: DrimGeometry = DRIM_R,
+                        n_queues: Optional[int] = None, mesh=None,
+                        ) -> Tuple[np.ndarray, "QueueSchedule"]:
+    """The first MIMD workload: the carry-save popcount tree split
+    across per-bank command queues.
+
+    Disjoint compressor subtrees run on different bank queues
+    concurrently (`pim.queue.execute_partitioned`), with cross-bank
+    fences where subtrees merge — the critical path is the fence-staged
+    slowest queue, not the whole tree.  Bit-exact vs
+    `kernels/ref.py:xnor_gemm_ref` like every other path.
+    """
+    from repro.pim.queue import execute_partitioned
+    m, k_bits = a_bits.shape
+    n = b_bits.shape[0]
+    graph, nbits = bnn_dot_graph_carrysave(k_bits)
+    feeds, lanes = stage_bnn_planes(a_bits, b_bits)
+    outs, sched = execute_partitioned(graph, feeds, geom=geom,
+                                      n_bits=lanes, n_queues=n_queues,
+                                      mesh=mesh)
+    count = decode_counts(outs, nbits, lanes)
     return (2 * count - k_bits).reshape(m, n), sched

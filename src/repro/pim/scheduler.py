@@ -58,9 +58,8 @@ from repro.core import (AAP, DRIM_R, DrimGeometry, encode,
                         microprogram_maj3, microprogram_not,
                         microprogram_xnor2, microprogram_xor2,
                         run_program_unrolled)
-from repro.core.device import (DrimDevice, device_load_rows,
-                               device_read_rows, device_run_program,
-                               make_device)
+from repro.core.device import (device_load_rows, device_read_rows,
+                               device_run_program, make_device)
 from repro.core.energy import E_AAP_NJ_PER_KB
 from repro.core.subarray import N_XROWS, WORD_BITS
 
@@ -126,22 +125,55 @@ def build_program(op: str) -> List[AAP]:
 # AAP stream (and re-measure its cost) on every call — pure waste, since
 # the program depends only on the op: Table-2 addresses are per-slot row
 # indices, identical for every geometry (the template is built from
-# N_DATA_ROWS and WORD_BITS, never from banks/chips/row_bits).  The
-# stats counter exists so tests can assert the hit path is taken.
+# N_DATA_ROWS and WORD_BITS, never from banks/chips/row_bits).  The key
+# is either an op name or a program tuple itself (the queued engine
+# streams per-bank programs through the same memo); `queue=` tags the
+# hit/miss on that queue's own counters so mixed multi-program streams
+# can be audited per bank queue.  The stats counter exists so tests can
+# assert the hit path is taken.
 ENCODE_CACHE_STATS: collections.Counter = collections.Counter()
-_ENCODED_CACHE: Dict[str, Tuple[jax.Array, Tuple[AAP, ...], int]] = {}
+# Op-name keys are bounded by the Table-2 op count; program-tuple keys
+# (fused graphs, partition segments) are open-ended, so that side is a
+# bounded LRU — the nightly random-DAG sweeps stream a fresh program
+# per graph and must not grow process memory without bound.
+_ENCODED_CACHE: Dict = {}
+_ENCODED_TUPLE_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_ENCODED_TUPLE_CACHE_MAX = 512
 
 
-def encoded_program(op: str) -> Tuple[jax.Array, Tuple[AAP, ...], int]:
-    """Cached (encoded [n, 5] stream, program tuple, n_aaps) for `op`."""
-    hit = _ENCODED_CACHE.get(op)
+def encoded_program(op, *, queue: int | None = None,
+                    materialize: bool = True,
+                    ) -> Tuple[jax.Array | None, Tuple[AAP, ...], int]:
+    """Cached (encoded [n, 5] stream, program tuple, n_aaps).
+
+    `op` is an op name ("xnor2", ...) or a sequence of `AAP`s — fused
+    graph streams and per-bank queue programs memoize through the same
+    stats.  `queue` additionally books the hit/miss under
+    ``q{queue}:hits`` / ``q{queue}:misses``.  `materialize=False` skips
+    building the encoded device array (the unrolled engines never read
+    it — they memoize for the dedup + accounting); a later
+    materializing call fills it in place.
+    """
+    key = op if isinstance(op, str) else tuple(op)
+    cache = _ENCODED_CACHE if isinstance(key, str) else _ENCODED_TUPLE_CACHE
+    hit = cache.get(key)
+    kind = "hits" if hit is not None else "misses"
+    ENCODE_CACHE_STATS[kind] += 1
+    if queue is not None:
+        ENCODE_CACHE_STATS[f"q{queue}:{kind}"] += 1
     if hit is not None:
-        ENCODE_CACHE_STATS["hits"] += 1
+        if cache is _ENCODED_TUPLE_CACHE:
+            _ENCODED_TUPLE_CACHE.move_to_end(key)
+        if hit[0] is None and materialize:
+            hit = (encode(hit[1]), hit[1], hit[2])
+            cache[key] = hit
         return hit
-    ENCODE_CACHE_STATS["misses"] += 1
-    prog = tuple(build_program(op))
-    out = (encode(prog), prog, len(prog))
-    _ENCODED_CACHE[op] = out
+    prog = key if isinstance(key, tuple) else tuple(build_program(key))
+    out = (encode(prog) if materialize else None, prog, len(prog))
+    cache[key] = out
+    if cache is _ENCODED_TUPLE_CACHE:
+        while len(_ENCODED_TUPLE_CACHE) > _ENCODED_TUPLE_CACHE_MAX:
+            _ENCODED_TUPLE_CACHE.popitem(last=False)
     return out
 
 
@@ -239,60 +271,68 @@ def plan_schedule(op: str, n_bits: int, *,
 # counter is wave-count independent.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
+ENGINES = ("resident", "baseline", "queued")
 
-@functools.partial(jax.jit, static_argnames=("result_rows",))
-def run_waves_baseline(dev0: DrimDevice, staged: jax.Array,
-                       encoded: jax.Array,
-                       result_rows: Tuple[int, ...]) -> jax.Array:
-    """The PR 2 wave loop, kept as the differential/benchmark reference.
 
-    staged: [waves, n_rows_in, chips, banks, subarrays, row_words] —
-    wave w writes its [n_rows_in, ...] block into word-lines
-    [0, n_rows_in) of every slot, runs the encoded AAP stream through
-    the vmapped `lax.scan` interpreter over the FULL device state, and
-    reads back `result_rows`.  Every wave starts from `dev0`, so each
-    wave re-materializes (and the interpreter re-copies) the whole
-    [chips, banks, subarrays, rows, words] stack — the host-staging hot
-    path `run_waves` removes.  `benchmarks/fig_fleet.py` measures the
-    two against each other and the sharded differential suite holds
-    them bit-identical.
+def wave_fn(engine: str, program: Tuple[AAP, ...],
+            result_rows: Tuple[int, ...], n_rows: int):
+    """The per-wave function every engine shares — ONE code path.
 
-    Returns [waves, len(result_rows), chips, banks, subarrays, row_words].
+    Returns `one_wave(tiles)` mapping one wave's staged tile block
+    [n_rows_in, chips, banks, subarrays, row_words] to the readback
+    block [len(result_rows), ...]:
+
+      * "resident" / "queued": `run_program_unrolled` specializes every
+        AAP to its word-lines at trace time, so each wave touches ONLY
+        the rows the stream names — operand tiles arrive device-
+        resident, intermediates live as per-row values, and readback
+        gathers just the result rows.  The queued engine maps this over
+        per-bank payloads, one program (and program counter) per queue.
+      * "baseline": the PR 2 reference — a fresh full device state per
+        wave, the encoded stream through the vmapped `lax.scan`
+        interpreter, `device_read_rows` readback.
+
+    All tile shapes are static under trace, so the engine split costs
+    nothing at runtime; the differential suites hold the engines
+    bit-identical.
     """
-    def one_wave(tiles: jax.Array) -> jax.Array:
-        TRACE_COUNTS["wave_body_baseline"] += 1
-        dev = device_load_rows(dev0, 0, jnp.moveaxis(tiles, 0, 3))
-        out = device_run_program(dev, encoded)
-        return device_read_rows(out, result_rows)
-
-    return jax.lax.map(one_wave, staged)
-
-
-@functools.lru_cache(maxsize=512)
-def _wave_runner(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
-                 n_rows: int, mesh, donate: bool):
-    """Compiled wave executor for one (program, readback, mesh) signature.
-
-    The program is a static argument: `run_program_unrolled` specializes
-    every AAP to its word-lines at trace time, so each wave touches ONLY
-    the rows the stream names — operand tiles arrive device-resident,
-    intermediates live as per-row values, and readback gathers just the
-    result rows instead of materializing the full device state.  With a
-    mesh, the wave body runs under `shard_map` over (chips, banks) with
-    no collectives; `donate=True` hands the staged buffer to XLA for
-    output reuse.
-    """
-    def body(staged: jax.Array) -> jax.Array:
-        TRACE_COUNTS["wave_body"] += 1
-        zeros = jnp.zeros(staged.shape[2:], jnp.uint32)
+    if engine == "baseline":
+        # encode directly: the enclosing runner is already memoized per
+        # program, and the op-name `encoded_program` cache would only
+        # gain a duplicate entry under the tuple key
+        encoded = encode(program)
 
         def one_wave(tiles: jax.Array) -> jax.Array:
+            _, c, b, s, w = tiles.shape
+            dev0 = make_device(chips=c, banks=b, subarrays=s,
+                               n_data=n_rows - N_XROWS, row_bits=w * 32)
+            dev = device_load_rows(dev0, 0, jnp.moveaxis(tiles, 0, 3))
+            out = device_run_program(dev, encoded)
+            return device_read_rows(out, result_rows)
+    else:
+        def one_wave(tiles: jax.Array) -> jax.Array:
+            zeros = jnp.zeros(tiles.shape[1:], jnp.uint32)
             rows = {wl: tiles[wl] for wl in range(tiles.shape[0])}
             rows, dcc = run_program_unrolled(program, rows, {},
                                              n_rows=n_rows, zeros=zeros)
             return jnp.stack([rows.get(r, zeros) for r in result_rows])
+    return one_wave
 
-        return jax.lax.map(one_wave, staged)
+
+@functools.lru_cache(maxsize=512)
+def _wave_runner(engine: str, program: Tuple[AAP, ...],
+                 result_rows: Tuple[int, ...], n_rows: int, mesh,
+                 donate: bool):
+    """Compiled wave executor for one (engine, program, readback, mesh)
+    signature: a single `lax.map` of the shared `wave_fn` body over the
+    wave axis.  With a mesh, the body runs under `shard_map` over
+    (chips, banks) with no collectives; `donate=True` hands the staged
+    buffer to XLA for output reuse."""
+    def body(staged: jax.Array) -> jax.Array:
+        TRACE_COUNTS["wave_body" if engine != "baseline"
+                     else "wave_body_baseline"] += 1
+        return jax.lax.map(wave_fn(engine, program, result_rows, n_rows),
+                           staged)
 
     fn = body
     if mesh is not None:
@@ -304,7 +344,7 @@ def _wave_runner(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
 
 def run_waves(staged: jax.Array, program: Sequence[AAP],
               result_rows: Tuple[int, ...], *, n_rows: int,
-              mesh=None) -> jax.Array:
+              mesh=None, engine: str = "resident") -> jax.Array:
     """Execute every wave of a staged payload in ONE traced computation.
 
     staged: [waves, n_rows_in, chips, banks, subarrays, row_words] —
@@ -312,24 +352,38 @@ def run_waves(staged: jax.Array, program: Sequence[AAP],
     [0, n_rows_in) (operands for the plain scheduler, graph inputs for
     the fused path).  `program` is the host-side AAP stream whose
     addresses were resolved against a template with `n_rows` total
-    normal rows (addresses >= n_rows are DCC word-lines); it executes
-    unrolled — see `_wave_runner`.  Waves are independent (each starts
-    from a fresh sub-array; every live row is written before it is
-    read), so the wave axis is one `lax.map`: one trace, one dispatch,
-    regardless of wave count.
+    normal rows (addresses >= n_rows are DCC word-lines); the engine-
+    specific per-wave body comes from `wave_fn`.  Waves are independent
+    (each starts from a fresh sub-array; every live row is written
+    before it is read), so the wave axis is one `lax.map`: one trace,
+    one dispatch, regardless of wave count.
 
     The staged buffer is DONATED to XLA whenever the output tile block
     has the same shape (len(result_rows) == n_rows_in), letting the
-    readback reuse the operand memory in place of a fresh allocation.
-    `mesh` (from `pim.mesh.fleet_mesh`) runs the whole loop under
-    `shard_map` over (chips, banks).
+    readback reuse the operand memory in place of a fresh allocation
+    (resident engine only).  `mesh` (from `pim.mesh.fleet_mesh`) runs
+    the whole loop under `shard_map` over (chips, banks).
 
     Returns [waves, len(result_rows), chips, banks, subarrays, row_words].
     """
-    donate = len(result_rows) == staged.shape[1]
-    runner = _wave_runner(tuple(program), tuple(result_rows), n_rows,
-                          mesh, donate)
+    donate = engine != "baseline" and len(result_rows) == staged.shape[1]
+    if engine == "baseline":
+        mesh = None
+    runner = _wave_runner(engine, tuple(program), tuple(result_rows),
+                          n_rows, mesh, donate)
     return runner(staged)
+
+
+def run_waves_baseline(staged: jax.Array, program: Sequence[AAP],
+                       result_rows: Tuple[int, ...], *,
+                       n_rows: int) -> jax.Array:
+    """The PR 2 wave loop (full device state through the vmapped
+    `lax.scan` interpreter, fresh state per wave), kept as the
+    differential/benchmark reference — now a thin dispatch through the
+    same `wave_fn`/`_wave_runner` path the resident and queued engines
+    use."""
+    return run_waves(staged, program, result_rows, n_rows=n_rows,
+                     engine="baseline")
 
 
 @functools.lru_cache(maxsize=512)
@@ -366,8 +420,43 @@ def stage_rows(arrays: Sequence[jax.Array], *, geom: DrimGeometry,
     return staged, tiles, waves
 
 
+def dispatch_waves(engine: str, arrays: Sequence[jax.Array],
+                   program: Sequence[AAP], result_rows: Tuple[int, ...],
+                   *, n_rows: int, geom: DrimGeometry, mesh=None,
+                   n_queues: int | None = None,
+                   ) -> Tuple[jax.Array, int, int]:
+    """ONE dispatch point for all three wave engines: engine-specific
+    staging, shared wave body (`wave_fn`).
+
+      * "resident": device-resident shard-aligned staging, donated
+        buffers, optional `shard_map` over `mesh`.
+      * "baseline": eager staging, full-state scan interpreter.
+      * "queued":  the payload is split into per-bank command queues
+        (`pim.queue`), each with its own program stream and program
+        counter, issued as one MIMD dispatch.
+
+    `execute` and `graph.execute_graph` both route here, so an engine
+    added once is available to plain ops and fused DAGs alike.
+    Returns (outs, tiles, waves) with outs
+    [waves, len(result_rows), chips, banks, subarrays, row_words].
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "queued":
+        from repro.pim.queue import dispatch_uniform_queued
+        return dispatch_uniform_queued(
+            arrays, program, result_rows, n_rows=n_rows, geom=geom,
+            mesh=mesh, n_queues=n_queues)
+    staged, tiles, waves = stage_rows(
+        arrays, geom=geom, mesh=mesh if engine == "resident" else None)
+    outs = run_waves(staged, program, result_rows, n_rows=n_rows,
+                     mesh=mesh, engine=engine)
+    return outs, tiles, waves
+
+
 def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
             n_bits: int | None = None, mesh=None, engine: str = "resident",
+            n_queues: int | None = None,
             ) -> Tuple[Tuple[jax.Array, ...], Schedule]:
     """Run a bulk op through the simulated device fleet.
 
@@ -382,14 +471,17 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
     over a `pim.mesh.fleet_mesh`); engine="baseline" is the PR 2 path
     (full device state through the vmapped scan interpreter, no mesh) —
     kept so benchmarks and differential tests can pin the two against
-    each other.
+    each other; engine="queued" splits the bank axis into `n_queues`
+    per-bank command queues with independent program streams
+    (`pim.queue`) and returns the queue-aware `QueueSchedule` (same
+    results, bank-contention + DMA-overlap cost model).
     """
     arity = OP_ARITY.get(op)
     if arity is None:
         raise ValueError(f"unknown bulk op {op!r}")
     if len(operands) != arity:
         raise ValueError(f"{op} takes {arity} operands, got {len(operands)}")
-    if engine not in ("resident", "baseline"):
+    if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}")
     ops = [jnp.asarray(x, jnp.uint32).reshape(-1) for x in operands]
     n_words = ops[0].shape[0]
@@ -400,33 +492,35 @@ def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
     if not 0 < n_bits <= n_words * WORD_BITS:
         raise ValueError("n_bits out of range for the given operands")
 
-    enc, prog, n_aaps = encoded_program(op)
+    _, prog, n_aaps = encoded_program(op)
     result_rows = tuple(RESULT_ROWS[op])
-    if engine == "baseline":
-        staged, tiles, waves = stage_rows(ops, geom=geom)
-        dev0 = make_device(geom, n_data=N_DATA_ROWS)
-        outs = run_waves_baseline(dev0, staged, enc, result_rows)
-    else:
-        staged, tiles, waves = stage_rows(ops, geom=geom, mesh=mesh)
-        outs = run_waves(staged, prog, result_rows,
-                         n_rows=N_DATA_ROWS + N_XROWS, mesh=mesh)
+    outs, tiles, waves = dispatch_waves(
+        engine, ops, prog, result_rows, n_rows=N_DATA_ROWS + N_XROWS,
+        geom=geom, mesh=mesh, n_queues=n_queues)
     # [waves, n_res, c, b, s, row_w] -> flat wave-major order per result;
     # only the n_words result words of assigned tiles leave the device.
     results = tuple(outs[:, i].reshape(-1)[:n_words]
                     for i in range(len(result_rows)))
 
-    sched = Schedule(
-        op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
-        slots=geom.n_subarrays, waves=waves, aaps_per_tile=n_aaps,
-        chips=geom.chips, banks=geom.banks,
-        subarrays_per_bank=geom.subarrays_per_bank, t_aap_s=geom.t_aap_s,
-    )
+    if engine == "queued":
+        from repro.pim.queue import uniform_queue_schedule
+        sched: Schedule = uniform_queue_schedule(
+            op, n_bits=n_bits, geom=geom, tiles=tiles, waves=waves,
+            n_queues=n_queues)
+    else:
+        sched = Schedule(
+            op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
+            slots=geom.n_subarrays, waves=waves, aaps_per_tile=n_aaps,
+            chips=geom.chips, banks=geom.banks,
+            subarrays_per_bank=geom.subarrays_per_bank,
+            t_aap_s=geom.t_aap_s,
+        )
     return results, sched
 
 
 def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
                    geom: DrimGeometry = DRIM_R, mesh=None,
-                   engine: str = "resident",
+                   engine: str = "resident", n_queues: int | None = None,
                    ) -> List[Tuple[Tuple[jax.Array, ...], Schedule]]:
     """Run an op list [(op, operands), ...] back-to-back on the same
     fleet; total latency/energy is the sum over schedules.
@@ -437,5 +531,6 @@ def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
     compile the whole DAG into one resident AAP stream; the
     differential suite holds the two paths bit-identical.
     """
-    return [execute(op, *args, geom=geom, mesh=mesh, engine=engine)
+    return [execute(op, *args, geom=geom, mesh=mesh, engine=engine,
+                    n_queues=n_queues)
             for op, args in ops]

@@ -1,0 +1,419 @@
+"""Differential suite for the per-bank async command-queue subsystem.
+
+The queued engine must be invisible at the value level: with every
+queue running the same stream it is held bit-identical to the resident
+and baseline engines (and the numpy oracle) over single ops, fused
+DAGs, and the random-DAG suite; with the graph SPLIT across queues
+(`execute_partitioned`) the fence-staged MIMD execution must still
+reproduce the oracle exactly, with the partition invariants (cross-bank
+edges always fence forward, segments cover the node list, critical
+path <= total work) checked structurally.  The full-state MIMD
+reference (`device_run_program_banked`) pins the per-queue unrolled
+executor the same way the scan interpreter pins the SIMD one, a
+subprocess run re-executes the module on a forced 8-device CPU
+platform, and the `encoded_program` memo's per-queue hit/miss
+accounting is audited under mixed multi-program streams.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from test_graph import GEOMS, random_graph
+
+from repro.core import DrimGeometry, encode, simulate_bus_issue
+from repro.core.device import (device_load_rows, device_run_program,
+                               device_run_program_banked, make_device)
+from repro.core.timing import CMD_SLOTS_PER_AAP
+from repro.pim import (OP_ARITY, bank_blocks, build_program,
+                       default_n_queues, execute, execute_graph,
+                       execute_partitioned, expected_results, fleet_mesh,
+                       graph_ref_results, partition_graph,
+                       plan_partitioned_schedule, plan_queued_schedule,
+                       random_operands)
+from repro.pim.bnn import (bnn_dot_drim, bnn_dot_graph,
+                           bnn_dot_graph_carrysave, bnn_dot_partitioned,
+                           counter_bits)
+from repro.pim.graph import compile_graph
+from repro.pim.offload import plan_queued
+
+MULTI_DEVICE = len(jax.devices()) >= 8
+
+
+# ---------------------------------------------------------------------------
+# Uniform queued engine == SIMD engines == oracle
+# ---------------------------------------------------------------------------
+
+def test_execute_queued_bit_exact_all_ops(small_geom):
+    """Every bulk op through the queued engine == oracle == baseline,
+    on a ragged multi-wave payload, with a queue-aware schedule whose
+    base fields agree with the SIMD schedule."""
+    row_w = small_geom.row_bits // 32
+    n_words = 2 * small_geom.n_subarrays * row_w + 3
+    for op in sorted(OP_ARITY):
+        args = random_operands(op, n_words, seed=sum(map(ord, op)))
+        res_q, sched_q = execute(op, *args, geom=small_geom,
+                                 engine="queued")
+        res_b, sched_b = execute(op, *args, geom=small_geom,
+                                 engine="baseline")
+        for got, base, want in zip(res_q, res_b, expected_results(op, args)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+            np.testing.assert_array_equal(np.asarray(base),
+                                          np.asarray(want))
+        assert (sched_q.op, sched_q.tiles, sched_q.waves,
+                sched_q.aaps_per_tile) == (sched_b.op, sched_b.tiles,
+                                           sched_b.waves,
+                                           sched_b.aaps_per_tile)
+        assert sched_q.n_queues == default_n_queues(small_geom)
+        assert sched_q.banks_per_queue * sched_q.n_queues \
+            == small_geom.banks
+        assert sched_q.fence_stages == 1
+        assert sched_q.overlapped_latency_s <= sched_q.serialized_latency_s
+
+
+def test_execute_queued_explicit_queue_counts(small_geom):
+    a, b = random_operands("xnor2", 37, seed=9)
+    want = ~(a ^ b)
+    for nq in (1, 2, 4):
+        (res,), sched = execute("xnor2", a, b, geom=small_geom,
+                                engine="queued", n_queues=nq)
+        np.testing.assert_array_equal(np.asarray(res), want)
+        assert sched.n_queues == nq
+    with pytest.raises(ValueError):
+        execute("xnor2", a, b, geom=small_geom, engine="queued",
+                n_queues=3)          # does not divide 4 banks
+
+
+def test_random_dag_queued_differential(n_examples, small_geom):
+    """ISSUE acceptance: queued == sharded == numpy oracle over the
+    random-DAG suite, same fused stream through per-queue counters —
+    the queued engine running UNDER the fleet mesh, so the forced
+    8-device run exercises the shard_map multi-queue dispatch."""
+    for seed in range(n_examples):
+        rng = np.random.default_rng(0xCAFE + seed)
+        graph = random_graph(rng)
+        geom = GEOMS[int(rng.integers(0, len(GEOMS)))]
+        mesh = fleet_mesh(geom)
+        row_w = geom.row_bits // 32
+        max_words = 2 * geom.n_subarrays * row_w + 3
+        n_words = int(rng.integers(1, max_words + 1))
+        feeds = {name: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+                 for name in graph.input_names}
+
+        queued, sched_q = execute_graph(graph, feeds, geom=geom,
+                                        engine="queued", mesh=mesh)
+        sharded, sched_s = execute_graph(graph, feeds, geom=geom,
+                                         mesh=mesh)
+        ref = graph_ref_results(graph, feeds)
+        assert set(queued) == set(sharded) == set(ref)
+        for name in ref:
+            np.testing.assert_array_equal(np.asarray(queued[name]),
+                                          ref[name])
+            np.testing.assert_array_equal(np.asarray(sharded[name]),
+                                          ref[name])
+        assert (sched_q.aaps_per_tile, sched_q.tiles, sched_q.waves) \
+            == (sched_s.aaps_per_tile, sched_s.tiles, sched_s.waves)
+
+
+# ---------------------------------------------------------------------------
+# MIMD: partitioned graphs
+# ---------------------------------------------------------------------------
+
+def test_partitioned_random_dags_match_oracle(n_examples, small_geom):
+    """Partition-fence correctness over random DAGs: the fence-staged
+    MIMD execution reproduces the oracle bit for bit for every queue
+    count, and the partition accounting is self-consistent."""
+    for seed in range(n_examples):
+        rng = np.random.default_rng(0xFACE + seed)
+        graph = random_graph(rng)
+        n_words = int(rng.integers(1, 40))
+        feeds = {name: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+                 for name in graph.input_names}
+        ref = graph_ref_results(graph, feeds)
+        mesh = fleet_mesh(small_geom)
+        for nq in (1, 2, 4):
+            out, sched = execute_partitioned(graph, feeds,
+                                             geom=small_geom, n_queues=nq,
+                                             mesh=mesh)
+            assert set(out) == set(ref)
+            for name in ref:
+                np.testing.assert_array_equal(np.asarray(out[name]),
+                                              ref[name], err_msg=name)
+            assert sched.n_queues == nq
+            assert sched.aaps_per_tile <= sched.issued_aaps_per_tile
+            assert sched.fence_stages >= 1 or sched.issued_aaps_per_tile == 0
+
+
+def test_partition_fences_order_cross_queue_edges():
+    """Structural fence model: every cross-queue edge crosses a stage
+    boundary forward; segments partition the non-copy nodes; the
+    critical path is the sum over stages of the slowest segment."""
+    g, _ = bnn_dot_graph_carrysave(8)
+    gp = partition_graph(g, 4)
+    assert gp.n_parts == 4 and gp.n_stages >= 2 and gp.cross_edges
+
+    covered = sorted(i for s in gp.segments for i in s.node_ids)
+    non_copy = [i for i, (op, _, _) in enumerate(g.nodes) if op != "copy"]
+    assert covered == non_copy
+
+    # producer/consumer stages for every cross edge strictly increase
+    producer_of = {}
+    for i, (op, opnds, res) in enumerate(g.nodes):
+        if op != "copy":
+            for v in res:
+                producer_of[f"v{v}"] = i
+    for value, src_part, dst_part in gp.cross_edges:
+        assert src_part != dst_part
+        j = producer_of[value]
+        assert gp.part_of[j] == src_part
+        consumers = [i for i, (op, opnds, _) in enumerate(g.nodes)
+                     if op != "copy" and gp.part_of[i] == dst_part]
+        assert any(gp.stage_of[i] > gp.stage_of[j] for i in consumers)
+
+    per_stage = gp.stage_aaps
+    assert gp.critical_path_aaps_per_tile == sum(max(t) for t in per_stage
+                                                 if t)
+    assert gp.issued_aaps_per_tile == sum(sum(t) for t in per_stage)
+    assert gp.critical_path_aaps_per_tile <= gp.issued_aaps_per_tile
+    # plan == what execute_partitioned measures
+    sched = plan_partitioned_schedule(g, 512, geom=DrimGeometry(
+        chips=1, banks=4, subarrays_per_bank=2, row_bits=32), n_queues=4)
+    assert sched.aaps_per_tile == gp.critical_path_aaps_per_tile
+
+
+def test_partitioned_input_names_cannot_collide(small_geom):
+    """Regression: a graph input named like an internal value
+    (``v{vid}``) must not collide with the partition's env names."""
+    from repro.pim import BulkGraph
+    rng = np.random.default_rng(21)
+    g = BulkGraph()
+    a, b = g.input("v4"), g.input("v5")     # adversarial input names
+    x = g.op("xnor2", a, b)
+    y = g.op("maj3", x, a, b)
+    z = g.op("add", y, x, a)
+    g.output("s", z[0])
+    g.output("v4_out", a)
+    feeds = {"v4": rng.integers(0, 1 << 32, 7, dtype=np.uint32),
+             "v5": rng.integers(0, 1 << 32, 7, dtype=np.uint32)}
+    ref = graph_ref_results(g, feeds)
+    for nq in (1, 2, 4):
+        out, _ = execute_partitioned(g, feeds, geom=small_geom,
+                                     n_queues=nq)
+        for name in ref:
+            np.testing.assert_array_equal(np.asarray(out[name]),
+                                          ref[name], err_msg=name)
+
+
+def test_partitioned_chain_single_queue_degenerates(small_geom):
+    """A linear dependency chain cannot be split: everything lands on
+    one queue, zero cross-bank rows, one stage."""
+    from repro.pim import BulkGraph
+    g = BulkGraph()
+    a, b = g.input("a"), g.input("b")
+    x = g.op("xnor2", a, b)
+    y = g.op("not", x)
+    z = g.op("not", y)
+    g.output("z", z)
+    gp = partition_graph(g, 4)
+    assert gp.n_stages == 1
+    assert gp.cross_fence_rows == 0
+    assert sorted(gp.queue_aaps_per_tile, reverse=True)[1:] == [0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Carry-save popcount BNN
+# ---------------------------------------------------------------------------
+
+def test_carrysave_bnn_bit_exact_and_cheaper(small_geom):
+    """ISSUE acceptance: the 3:2-compressor tree popcount is bit-exact
+    vs the ripple path and the oracle for every K, with strictly fewer
+    critical-path AAPs; the MIMD partition never exceeds the fused
+    carry-save stream."""
+    rng = np.random.default_rng(3)
+    for k in (1, 2, 3, 5, 8, 9):
+        g, nbits = bnn_dot_graph_carrysave(k)
+        assert nbits == counter_bits(k)
+        a = rng.integers(0, 2, (4, k)).astype(np.uint8)
+        b = rng.integers(0, 2, (5, k)).astype(np.uint8)
+        ref = (2 * (a[:, None, :] == b[None, :, :]).sum(-1)
+               - k).astype(np.int32)
+        c_r, s_r = bnn_dot_drim(a, b, geom=small_geom)
+        c_c, s_c = bnn_dot_drim(a, b, geom=small_geom,
+                                accumulate="carrysave")
+        c_q, _ = bnn_dot_drim(a, b, geom=small_geom,
+                              accumulate="carrysave", engine="queued")
+        c_p, s_p = bnn_dot_partitioned(a, b, geom=small_geom, n_queues=4)
+        for got in (c_r, c_c, c_q, c_p):
+            np.testing.assert_array_equal(got, ref)
+        assert s_c.aaps_per_tile < s_r.aaps_per_tile
+        assert s_p.aaps_per_tile <= s_c.aaps_per_tile
+
+    with pytest.raises(ValueError):
+        bnn_dot_drim(np.zeros((2, 2), np.uint8), np.zeros((2, 2), np.uint8),
+                     accumulate="wallace")
+
+
+# ---------------------------------------------------------------------------
+# Full-state MIMD reference + bus model
+# ---------------------------------------------------------------------------
+
+def test_device_run_program_banked_matches_blocks(small_geom):
+    """Different encoded streams per bank block through the scan
+    interpreter == running each block's slice separately."""
+    rng = np.random.default_rng(0xBA)
+    dev = make_device(small_geom, n_data=8)
+    rows = rng.integers(0, 1 << 32,
+                        (dev.chips, dev.banks, dev.subarrays, 3, dev.words),
+                        dtype=np.uint32)
+    dev = device_load_rows(dev, 0, rows)
+    blocks = bank_blocks(dev.banks, 2)
+    encs = [encode(build_program("xnor2")), encode(build_program("add"))]
+    out = device_run_program_banked(dev, encs, blocks)
+    for (lo, hi), enc in zip(blocks, encs):
+        from repro.core.device import DrimDevice
+        ref = device_run_program(
+            DrimDevice(data=dev.data[:, lo:hi], dcc=dev.dcc[:, lo:hi]), enc)
+        np.testing.assert_array_equal(np.asarray(out.data[:, lo:hi]),
+                                      np.asarray(ref.data))
+        np.testing.assert_array_equal(np.asarray(out.dcc[:, lo:hi]),
+                                      np.asarray(ref.dcc))
+    with pytest.raises(ValueError):
+        device_run_program_banked(dev, encs, [(0, 1), (2, 4)])  # gap
+    with pytest.raises(ValueError):
+        device_run_program_banked(dev, encs[:1], blocks)
+
+
+def test_bus_issue_model_properties():
+    """Few queues issue back-to-back (skew only); past the saturation
+    point (slots/cmds ~ 36 queues) the makespan is issue-limited and
+    grows with total work."""
+    slots = CMD_SLOTS_PER_AAP
+    mk1, fin1 = simulate_bus_issue([10], slots_per_aap=slots)
+    assert mk1 == 10 * slots
+    mk4, _ = simulate_bus_issue([10] * 4, slots_per_aap=slots)
+    assert mk4 == 10 * slots + 3 * 3          # ramp skew only
+    mk64, _ = simulate_bus_issue([10] * 64, slots_per_aap=slots)
+    assert mk64 > 10 * slots + 63 * 3         # saturated: issue-limited
+    assert mk64 >= 64 * 10 * 3                # >= total command slots
+    assert simulate_bus_issue([], slots_per_aap=slots)[0] == 0
+    with pytest.raises(ValueError):
+        simulate_bus_issue([1], slots_per_aap=2, cmds_per_aap=3)
+
+
+def test_queue_schedule_contention_and_overlap():
+    geom8 = DrimGeometry(chips=1, banks=8, subarrays_per_bank=4)
+    geom64 = DrimGeometry(chips=1, banks=64, subarrays_per_bank=4)
+    s8 = plan_queued_schedule("xnor2", n_bits=1 << 20, geom=geom8,
+                              n_queues=8)
+    s64 = plan_queued_schedule("xnor2", n_bits=1 << 20, geom=geom64,
+                               n_queues=64)
+    assert s8.contention_stall_aaps <= s64.contention_stall_aaps
+    assert s64.contention_stall_aaps > 0
+    for s in (s8, s64):
+        assert s.overlapped_latency_s <= s.serialized_latency_s
+        assert s.dma_overlap_speedup >= 1.0
+        assert s.latency_s >= s.aaps_sequential * s.t_aap_s
+
+
+def test_plan_queued_offload_verdict(small_geom):
+    g, _ = bnn_dot_graph_carrysave(8)
+    rep = plan_queued(g, 1 << 16, geom=small_geom, n_queues=4)
+    assert rep.n_queues == 4
+    assert rep.critical_path_aaps <= rep.issued_aaps
+    assert rep.winner in ("DRIM-queued", "DRIM-fused", "TPU")
+    assert rep.dma_overlap_speedup >= 1.0
+    sim = plan_queued(g, 1 << 10, geom=small_geom, n_queues=2,
+                      simulate=True)
+    assert sim.simulated
+    d = rep.as_dict()
+    assert d["fence_stages"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Encoded-program memoization under mixed multi-program streams
+# ---------------------------------------------------------------------------
+
+def test_encoded_program_per_queue_accounting(small_geom):
+    """Satellite acceptance: mixed multi-program queue streams hit the
+    encode memo per queue — first issue misses, every repeat hits, and
+    the per-queue counters book exactly one event per dispatch."""
+    from repro.pim.scheduler import ENCODE_CACHE_STATS
+    g, _ = bnn_dot_graph_carrysave(5)
+    gp = partition_graph(g, 2)
+    progs = [s.fp.program for s in gp.segments]
+    assert len(set(progs)) > 1            # genuinely mixed streams
+
+    rng = np.random.default_rng(11)
+    feeds = {n: rng.integers(0, 1 << 32, 4, dtype=np.uint32)
+             for n in g.input_names}
+    before = dict(ENCODE_CACHE_STATS)
+    out1, _ = execute_partitioned(g, feeds, geom=small_geom, n_queues=2)
+    mid = dict(ENCODE_CACHE_STATS)
+    out2, _ = execute_partitioned(g, feeds, geom=small_geom, n_queues=2)
+    after = dict(ENCODE_CACHE_STATS)
+
+    n_segs = len(gp.segments)
+    delta1 = {k: mid.get(k, 0) - before.get(k, 0) for k in mid}
+    delta2 = {k: after.get(k, 0) - mid.get(k, 0) for k in after}
+    # first run: at most one miss per distinct program stream (other
+    # tests may share streams through the process-wide memo), exactly
+    # one booked event per dispatched segment
+    assert delta1.get("misses", 0) <= len(set(progs))
+    assert delta1.get("misses", 0) + delta1.get("hits", 0) == n_segs
+    # second run: pure hits, booked on the same per-queue counters
+    assert delta2.get("misses", 0) == 0
+    assert delta2["hits"] == n_segs
+    per_queue2 = {k: v for k, v in delta2.items()
+                  if k.startswith("q") and v}
+    assert sum(per_queue2.values()) == n_segs
+    assert all(k.endswith(":hits") for k in per_queue2)
+    for name in out1:
+        np.testing.assert_array_equal(np.asarray(out1[name]),
+                                      np.asarray(out2[name]))
+
+
+def test_uniform_queued_cache_accounting(small_geom):
+    """The uniform queued engine streams ONE program through every
+    queue: one miss the first time, per-queue hits afterwards."""
+    from repro.pim.scheduler import ENCODE_CACHE_STATS
+    a, b, c = random_operands("maj3", 8, seed=2)
+    execute("maj3", a, b, c, geom=small_geom, engine="queued", n_queues=2)
+    before = dict(ENCODE_CACHE_STATS)
+    execute("maj3", a, b, c, geom=small_geom, engine="queued", n_queues=2)
+    after = dict(ENCODE_CACHE_STATS)
+    assert after["q0:hits"] - before.get("q0:hits", 0) == 1
+    assert after["q1:hits"] - before.get("q1:hits", 0) == 1
+    assert after.get("q0:misses", 0) == before.get("q0:misses", 0)
+
+
+# ---------------------------------------------------------------------------
+# Forced multi-device run
+# ---------------------------------------------------------------------------
+
+def test_forced_8device_cpu_queued_subprocess(fast_mode):
+    """ISSUE acceptance: the queued differential suite on a REAL forced
+    8-device CPU platform (fresh interpreter so XLA_FLAGS applies).
+    The CI `queued-differential` job runs the same configuration
+    in-process."""
+    if MULTI_DEVICE:
+        pytest.skip("already running with forced multi-device platform")
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        REPRO_FAST_TESTS="1",
+    )
+    cmd = [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+           os.path.abspath(__file__), "-k", "not subprocess"]
+    proc = subprocess.run(
+        cmd, env=env, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, (
+        f"forced-8-device queued suite failed:\n{proc.stdout}\n"
+        f"{proc.stderr}")
+    assert "passed" in proc.stdout
