@@ -8,7 +8,9 @@ payload grows with the fleet), and measures, per geometry:
   * the SIMULATED device throughput from the schedule (bits/s — the
     paper-model curve, linear in active sub-arrays), and
   * the WALL-CLOCK simulator throughput (row-wide results/s) of three
-    execution paths through `pim.scheduler.execute`:
+    execution paths, each a `drim.compile(op).lower(...)` of the SAME
+    pipeline (the lowering happens once per path; the timed loop is
+    pure `Lowered.run`):
       baseline  PR 2 loop — full device state through the vmapped
                 `lax.scan` interpreter, eager host staging
       resident  trace-time-unrolled program over device-resident tiles,
@@ -32,9 +34,10 @@ import time
 import jax
 import numpy as np
 
+import drim
 from benchmarks import record
 from repro.core import DRIM_S, DrimGeometry
-from repro.pim import execute, fleet_mesh, plan_schedule, random_operands
+from repro.pim import fleet_mesh, plan_schedule, random_operands
 from repro.core.subarray import WORD_BITS
 
 OP = "xnor2"
@@ -63,10 +66,11 @@ def _bench_path(path: str, geom: DrimGeometry, operands, n_words: int):
     host readback), warm compile excluded."""
     kwargs = {"baseline": {"engine": "baseline"}, "resident": {},
               "sharded": {"mesh": fleet_mesh(geom)}}[path]
+    low = drim.compile(OP, geom=geom).lower(**kwargs)
 
     def call():
-        (res,), sched = execute(OP, *operands, geom=geom, **kwargs)
-        return np.asarray(res), sched
+        (res,) = low.run(*operands)
+        return np.asarray(res), low.schedule
 
     _, sched = call()                        # compile + warm
     t0 = time.perf_counter()

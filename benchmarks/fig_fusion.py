@@ -23,10 +23,10 @@ import time
 
 import numpy as np
 
+import drim
 from repro.core import DRIM_R, DrimGeometry
 from repro.kernels.ref import pack_signs_ref, xnor_gemm_ref
 from repro.pim.bnn import bnn_dot_drim, bnn_dot_graph
-from repro.pim.graph import plan_graph_schedule
 
 K_SWEEP = (8, 16, 32, 64, 128)
 N_BITS = 2 ** 27        # one Fig.-8-scale bulk payload per plane set
@@ -38,8 +38,10 @@ SIM_GEOM = DrimGeometry(chips=1, banks=2, subarrays_per_bank=2,
 
 
 def sweep(ks=K_SWEEP, n_bits=N_BITS, geom=DRIM_R):
-    """[(k, fused_sched), ...] closed-form fused schedules per K."""
-    return [(k, plan_graph_schedule(bnn_dot_graph(k), n_bits, geom=geom))
+    """[(k, fused_sched), ...] closed-form fused schedules per K,
+    priced through the pipeline (`compile -> lower -> cost`)."""
+    return [(k, drim.compile(bnn_dot_graph(k), geom=geom).lower()
+             .cost(n_bits))
             for k in ks]
 
 
@@ -60,7 +62,7 @@ def simulated_check(m=SIM_M, n=SIM_N, k=SIM_K, geom=SIM_GEOM):
                                    k))
     np.testing.assert_array_equal(c, ref)
 
-    plan = plan_graph_schedule(bnn_dot_graph(k), m * n, geom=geom)
+    plan = drim.compile(bnn_dot_graph(k), geom=geom).lower().cost(m * n)
     assert plan.aaps_per_tile == sched.aaps_per_tile
     assert plan.waves == sched.waves
     assert sched.aaps_sequential < sched.unfused_aaps_sequential

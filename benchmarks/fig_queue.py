@@ -1,25 +1,30 @@
 """Async-queue figure: SIMD ripple vs MIMD carry-save BNN dot-product.
 
 The workload is the paper's target consumer — the binarized GEMM
-(XNOR -> popcount) — through four execution paths:
+(XNOR -> popcount) — and since PR 5 the carry-save tree is WRITTEN AS A
+PLAIN PYTHON FUNCTION (`traced_bnn`: `drim.xnor` + `drim.popcount`)
+and staged through the one `drim.compile -> lower -> run` pipeline.
+Four lowerings of the same pipeline:
 
     baseline     PR 2 ripple-counter graph, full-state scan interpreter
     sharded      ripple graph, resident engine + (chips, banks) fleet mesh
-    queued       CARRY-SAVE 3:2-compressor tree through per-bank command
+    queued       the TRACED carry-save tree through per-bank command
                  queues (engine="queued", queue-compatible mesh)
-    partitioned  the carry-save tree SPLIT across queues — different
+    partitioned  the traced tree SPLIT across queues — different
                  subtrees on different banks, cross-bank fences where
-                 they merge (`pim.queue.execute_partitioned`)
+                 they merge (`lower(partition=True)`)
 
-Two phases: a small full-pipeline run holds every path bit-exact vs
+Two phases: a small full-pipeline run holds every lowering (including
+the traced program on every engine) bit-exact vs
 `kernels/ref.py:xnor_gemm_ref`, then a large payload (1M lanes on
 4 Kbit rows — wide enough that element work, not per-op dispatch,
-dominates the CPU simulator) times the device path of each engine and
-reports wall-clock rows/s next to the critical-path AAP stream length.
-The PR acceptance assertions run as part of the benchmark:
+dominates the CPU simulator) times the device path of each prelowered
+program and reports wall-clock rows/s next to the critical-path AAP
+stream length.  The PR acceptance assertions run as part of the
+benchmark:
 
-  * the carry-save tree needs strictly fewer critical-path AAPs than
-    the PR 2 ripple accumulate,
+  * the traced carry-save tree needs strictly fewer critical-path AAPs
+    than the PR 2 ripple accumulate,
   * the queued engine's rows/s is >= the sharded SIMD path's on this
     workload,
   * the MIMD partition's fence-staged critical path is <= the fused
@@ -39,15 +44,14 @@ import time
 import jax
 import numpy as np
 
+import drim
 from benchmarks import record
 from repro.core import DrimGeometry
 from repro.core.subarray import WORD_BITS
 from repro.kernels.ref import xnor_gemm_ref
 from repro.pim import fleet_mesh, plan_queued_schedule
-from repro.pim.bnn import (bnn_dot_drim, bnn_dot_graph,
-                           bnn_dot_graph_carrysave, bnn_dot_partitioned)
-from repro.pim.graph import compile_graph, execute_graph, partition_graph
-from repro.pim.queue import execute_partitioned
+from repro.pim.bnn import (bnn_dot_graph, counter_bits, decode_counts,
+                           stage_bnn_planes)
 
 # 4 Kbit rows x 16 sub-arrays/bank: per-AAP element work dominates the
 # per-program dispatch overhead (the queued engine replicates its
@@ -70,22 +74,45 @@ def _geometry_dict(geom: DrimGeometry) -> dict:
             "row_bits": geom.row_bits, "slots": geom.n_subarrays}
 
 
+def traced_bnn(k: int = K) -> "drim.JittedFunction":
+    """The BNN dot-product as a PLAIN PYTHON FUNCTION: XNOR planes into
+    the carry-save popcount tree, traced by `drim.jit` — node-for-node
+    the hand-built `bnn_dot_graph_carrysave` dataflow."""
+    def dot(*planes):
+        xs = [drim.xnor(planes[i], planes[k + i]) for i in range(k)]
+        return {f"c{i}": p for i, p in enumerate(drim.popcount(xs))}
+
+    return drim.jit(dot, arg_names=[f"a{i}" for i in range(k)]
+                    + [f"b{i}" for i in range(k)], name=f"bnn_dot[{k}]")
+
+
+def _bnn_lanes(jitted, a, b, k, *, geom, **lower_kwargs) -> np.ndarray:
+    """Run the traced dot through one lowering and decode the counts."""
+    feeds, lanes = stage_bnn_planes(a, b)
+    planes = [feeds[n] for n in jitted.trace().arg_names]
+    outs = jitted(*planes, geom=geom, n_bits=lanes, **lower_kwargs)
+    count = decode_counts(outs, counter_bits(k), lanes)
+    return (2 * count - k).reshape(a.shape[0], b.shape[0])
+
+
 def check_bit_exact(geom=GEOM, m=48, n=48):
-    """Small full-pipeline run: all four paths == the XNOR-GEMM oracle."""
+    """Small full-pipeline run: the TRACED program on every engine and
+    the MIMD partition == the XNOR-GEMM oracle (ISSUE acceptance)."""
     rng = np.random.default_rng(0xB17)
     a = rng.integers(0, 2, (m, K)).astype(np.uint8)
     b = rng.integers(0, 2, (n, K)).astype(np.uint8)
     ref = np.asarray(xnor_gemm_ref(_pack_bits(a), _pack_bits(b), K))
     mesh = fleet_mesh(geom)
+    jitted = traced_bnn(K)
     outs = {
-        "baseline": bnn_dot_drim(a, b, geom=geom, engine="baseline")[0],
-        "sharded": bnn_dot_drim(a, b, geom=geom, mesh=mesh)[0],
-        "queued": bnn_dot_drim(a, b, geom=geom, accumulate="carrysave",
-                               engine="queued", mesh=mesh,
-                               n_queues=N_QUEUES)[0],
-        "partitioned": bnn_dot_partitioned(a, b, geom=geom,
-                                           n_queues=N_QUEUES,
-                                           mesh=mesh)[0],
+        # traced carry-save tree, all engines + the MIMD partition
+        "baseline": _bnn_lanes(jitted, a, b, K, geom=geom,
+                               engine="baseline"),
+        "sharded": _bnn_lanes(jitted, a, b, K, geom=geom, mesh=mesh),
+        "queued": _bnn_lanes(jitted, a, b, K, geom=geom, mesh=mesh,
+                             engine="queued", n_queues=N_QUEUES),
+        "partitioned": _bnn_lanes(jitted, a, b, K, geom=geom, mesh=mesh,
+                                  partition=True, n_queues=N_QUEUES),
     }
     for path, got in outs.items():
         np.testing.assert_array_equal(got, ref, err_msg=path)
@@ -114,15 +141,17 @@ def _bench_interleaved(calls, rounds):
 
 def sweep(geom=GEOM):
     """Timed sweep on a large payload: random word feeds through the
-    device path of each engine (plane packing/decoding is host-side
-    numpy, identical for every engine, and excluded)."""
+    device path of each PRELOWERED program (plane packing/decoding is
+    host-side numpy, identical for every engine, and excluded; the
+    lowerings are built once, the timed loop is pure `Lowered.run`)."""
     rng = np.random.default_rng(0x5EED)
     mesh = fleet_mesh(geom)
     g_ripple = bnn_dot_graph(K)
-    g_carry, _ = bnn_dot_graph_carrysave(K)
+    jitted = traced_bnn(K)
+    carry_names = jitted.trace().arg_names
     row_w = geom.row_bits // WORD_BITS
 
-    def feeds_for(graph, waves):
+    def feeds_for(names, waves):
         # device-committed uint32 planes: the timed path is staging +
         # waves + readback, not host numpy -> device conversion (which
         # is identical for every engine)
@@ -130,25 +159,31 @@ def sweep(geom=GEOM):
         import jax.numpy as jnp
         return {name: jnp.asarray(rng.integers(0, 1 << 32, n_words,
                                                dtype=np.uint32))
-                for name in graph.input_names}
+                for name in names}
 
     # The scan-interpreter baseline is ~50x the resident engines on this
     # payload; it gets one wave and one timed round (rows/s is
     # tile-normalized, so the paths stay comparable).
-    f_base = feeds_for(g_ripple, 1)
-    f_ripple = feeds_for(g_ripple, WAVES)
-    f_carry = feeds_for(g_carry, WAVES)
-    calls = {
-        "baseline": lambda: execute_graph(
-            g_ripple, f_base, geom=geom, engine="baseline"),
-        "sharded": lambda: execute_graph(
-            g_ripple, f_ripple, geom=geom, mesh=mesh),
-        "queued": lambda: execute_graph(
-            g_carry, f_carry, geom=geom, engine="queued", mesh=mesh,
-            n_queues=N_QUEUES),
-        "partitioned": lambda: execute_partitioned(
-            g_carry, f_carry, geom=geom, n_queues=N_QUEUES, mesh=mesh),
+    f_base = feeds_for(g_ripple.input_names, 1)
+    f_ripple = feeds_for(g_ripple.input_names, WAVES)
+    f_carry = feeds_for(carry_names, WAVES)
+    lows = {
+        "baseline": drim.compile(g_ripple, geom=geom)
+        .lower(engine="baseline"),
+        "sharded": drim.compile(g_ripple, geom=geom).lower(mesh=mesh),
+        "queued": jitted.lower(geom=geom, engine="queued", mesh=mesh,
+                               n_queues=N_QUEUES),
+        "partitioned": jitted.lower(geom=geom, partition=True,
+                                    n_queues=N_QUEUES, mesh=mesh),
     }
+    feeds = {"baseline": f_base, "sharded": f_ripple,
+             "queued": f_carry, "partitioned": f_carry}
+
+    def make_call(path):
+        low, f = lows[path], feeds[path]
+        return lambda: (low.run(f), low.schedule)
+
+    calls = {path: make_call(path) for path in lows}
     rounds = {p: TIMED_ITERS for p in calls}
     rounds["baseline"] = 1
     rows = {}
@@ -188,13 +223,14 @@ def run(csv_rows):
         print(f"{path:>12}{acc[path]:>15}{sched.aaps_per_tile:>11}"
               f"{rps / 1e3:>9.2f}{wall * 1e3:>9.2f}")
 
-    # -- acceptance assertions --------------------------------------------
-    ripple = compile_graph(bnn_dot_graph(K)).aaps_per_tile
-    carrysave = compile_graph(bnn_dot_graph_carrysave(K)[0]).aaps_per_tile
-    gp = partition_graph(bnn_dot_graph_carrysave(K)[0], N_QUEUES)
+    # -- acceptance assertions (all through the pipeline) -----------------
+    ripple = drim.compile(bnn_dot_graph(K)).lower().aaps
+    jitted = traced_bnn(K)
+    carrysave = drim.compile(jitted).lower().aaps
+    gp = drim.compile(jitted).lower(partition=True, n_queues=N_QUEUES).gp
     assert carrysave < ripple, (
-        f"carry-save tree ({carrysave} AAPs/tile) must beat the ripple "
-        f"accumulate ({ripple})")
+        f"traced carry-save tree ({carrysave} AAPs/tile) must beat the "
+        f"ripple accumulate ({ripple})")
     assert gp.critical_path_aaps_per_tile <= carrysave, (
         f"MIMD partition critical path {gp.critical_path_aaps_per_tile} "
         f"exceeds the fused carry-save stream {carrysave}")

@@ -5,77 +5,91 @@ the memory fleet, per assigned architecture.
 
 For every assigned architecture, prices the framework's own bulk-bitwise
 payloads (BitLinear weight sign-planes, 1-bit EF gradient reduction,
-sign-plane copies) on a DRIM-R fleet (AAP streams; paper timing/energy)
-versus executing the same op on the TPU (HBM-bandwidth bound), and
-prints the placement verdict. This is the analysis a deployment team
-runs to decide what to push into processing-in-memory.
-
-Pricing comes from the bulk-op scheduler (`pim/scheduler.py`): operands
-are tiled into 256-bit rows and assigned to (chip, bank, subarray) slots,
-so each row also shows the parallelism breakdown (waves x active
-sub-arrays).  The final section cross-checks the closed-form schedule
-against `simulate=True` — the same op actually executed on the
-functional `DrimDevice` fleet.
+sign-plane copies) through the staged pipeline — one
+`drim.compile(op).lower().verdict(n_bits)` per payload, every
+contender priced with the same `VerdictRow` fields — and prints the
+placement verdict.  This is the analysis a deployment team runs to
+decide what to push into processing-in-memory.
 
 The fused-graph section prices whole dataflow graphs (the BNN
-XNOR -> popcount-accumulate chain) compiled to ONE resident in-DRAM
-program (`pim/graph.py`) against the unfused op-at-a-time chain and the
-TPU — the scheduler-op-fusion win: intermediates never cross the DDR
-bus.
+XNOR -> popcount-accumulate chain) the same way: the unified Verdict
+carries the fused, unfused and TPU rows side by side, DDR traffic on
+one shared clock.  A cross-check section re-prices one lowering with
+`simulate=True` (the AAP streams actually run on the functional
+`DrimDevice` fleet) and the numbers must not move.
 """
 import numpy as np
 
+import drim
 from repro.configs.registry import ARCHS
 from repro.configs import get_config
 from repro.core import DrimGeometry
 from repro.kernels.ref import pack_signs_ref, xnor_gemm_ref
 from repro.pim.bnn import bnn_dot_drim, bnn_dot_graph
-from repro.pim.offload import plan, plan_fused, plan_model_payloads
+from repro.pim.offload import plan_model_payloads
+
+
+def drim_row(v: drim.Verdict) -> drim.VerdictRow:
+    return next(r for r in v.rows if r.contender.startswith("DRIM"))
 
 
 def main():
     print(f"{'arch':<18}{'payload':<26}{'bits':>10}{'DRIM':>11}"
-          f"{'TPU':>11}{'speedup':>9}{'waves':>8}{'subarr':>7}  winner")
+          f"{'TPU':>11}{'speedup':>9}  winner")
     for arch in ARCHS:
         cfg = get_config(arch)
-        for name, rep in plan_model_payloads(cfg).items():
-            print(f"{arch:<18}{name:<26}{rep.n_bits:>10.2e}"
-                  f"{rep.drim_latency_s * 1e3:>9.2f}ms"
-                  f"{rep.tpu_latency_s * 1e3:>9.2f}ms"
-                  f"{rep.speedup:>9.2f}{rep.waves:>8}"
-                  f"{rep.active_subarrays:>7}  {rep.winner}")
+        for name, v in plan_model_payloads(cfg).items():
+            dr, tpu = drim_row(v), v.row("TPU")
+            print(f"{arch:<18}{name:<26}{v.n_bits:>10.2e}"
+                  f"{dr.latency_s * 1e3:>9.2f}ms"
+                  f"{tpu.latency_s * 1e3:>9.2f}ms"
+                  f"{tpu.latency_s / max(dr.latency_s, 1e-30):>9.2f}"
+                  f"  {v.winner}")
 
     print("\n-- locality sensitivity (1 Gbit xnor2) --")
-    for in_dram in (True, False):
-        rep = plan("xnor2", 2**30, operands_in_dram=in_dram)
-        print(f"operands_in_dram={in_dram!s:<6} DRIM "
-              f"{rep.drim_latency_s * 1e3:7.3f} ms vs TPU "
-              f"{rep.tpu_latency_s * 1e3:7.3f} ms -> {rep.winner}")
+    v = drim.compile("xnor2").lower().verdict(2 ** 30)
+    dr, tpu = drim_row(v), v.row("TPU")
+    # staging operands through the host adds the boundary traffic the
+    # in-DRAM premise avoids — the same bytes the TPU row already prices
+    # as its HBM DMA time, so reuse that figure as the staging penalty
+    staged = dr.latency_s + tpu.dma_s
+    print(f"operands_in_dram=True   DRIM {dr.latency_s * 1e3:7.3f} ms "
+          f"vs TPU {tpu.latency_s * 1e3:7.3f} ms -> {v.winner}")
+    print(f"operands_in_dram=False  DRIM {staged * 1e3:7.3f} ms "
+          f"vs TPU {tpu.latency_s * 1e3:7.3f} ms -> "
+          f"{'DRIM' if staged < tpu.latency_s else 'TPU'}")
 
     print("\n-- closed-form schedule vs simulated execution (1 Mbit) --")
     for op in ("xnor2", "add"):
-        ana = plan(op, 2**20)
-        sim = plan(op, 2**20, simulate=True)
-        dev = sim.drim_latency_s / ana.drim_latency_s - 1.0
-        print(f"{op:<7} schedule {ana.drim_latency_s * 1e6:7.2f} us  "
-              f"simulated {sim.drim_latency_s * 1e6:7.2f} us  "
-              f"dev {dev:+.2%}  (tiles={sim.tiles}, waves={sim.waves}, "
-              f"active={sim.active_subarrays}, "
-              f"occupancy={sim.occupancy:.0%})")
+        low = drim.compile(op).lower()
+        ana = low.cost(2 ** 20)
+        sim = low.verdict(2 ** 20, simulate=True)
+        measured = low.schedule               # set by the simulated run
+        dev = measured.latency_s / ana.latency_s - 1.0
+        print(f"{op:<7} schedule {ana.latency_s * 1e6:7.2f} us  "
+              f"simulated {measured.latency_s * 1e6:7.2f} us  "
+              f"dev {dev:+.2%}  (tiles={measured.tiles}, "
+              f"waves={measured.waves}, "
+              f"active={measured.active_subarrays}, "
+              f"occupancy={measured.occupancy:.0%}, "
+              f"simulated={sim.simulated})")
 
     print("\n-- fused dataflow graphs: BNN XNOR->popcount-accumulate "
           "(2^27-bit planes) --")
     print(f"{'K':>4}{'nodes':>7}{'fused':>10}{'unfused':>10}{'TPU':>10}"
           f"{'x unfused':>10}{'energy x':>9}  winner")
     for k in (8, 32, 128):
-        rep = plan_fused(bnn_dot_graph(k), 2 ** 27)
-        print(f"{k:>4}{rep.n_nodes:>7}"
-              f"{rep.fused_latency_s * 1e3:>8.2f}ms"
-              f"{rep.unfused_latency_s * 1e3:>8.2f}ms"
-              f"{rep.tpu_latency_s * 1e3:>8.2f}ms"
-              f"{rep.speedup_vs_unfused:>10.3f}"
-              f"{rep.unfused_energy_j / rep.fused_energy_j:>9.2f}"
-              f"  {rep.winner}")
+        v = drim.compile(bnn_dot_graph(k)).lower().verdict(2 ** 27)
+        fused = v.row("DRIM-fused")
+        unfused = v.row("DRIM-unfused")
+        tpu = v.row("TPU")
+        print(f"{k:>4}{v.n_nodes:>7}"
+              f"{fused.latency_s * 1e3:>8.2f}ms"
+              f"{unfused.latency_s * 1e3:>8.2f}ms"
+              f"{tpu.latency_s * 1e3:>8.2f}ms"
+              f"{v.speedup('DRIM-fused', 'DRIM-unfused'):>10.3f}"
+              f"{unfused.energy_j / fused.energy_j:>9.2f}"
+              f"  {v.winner}")
 
     print("\n-- fused BNN dot-product executed on the simulated fleet --")
     rng = np.random.default_rng(42)

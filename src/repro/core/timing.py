@@ -44,6 +44,14 @@ CMD_SLOTS_PER_AAP = round(T_AAP_S / T_CMD_S)          # = 108
 DDR4_BW_BYTES_S = 19.2e9
 
 
+def ddr_rows_s(rows: int, row_bits: int) -> float:
+    """Seconds to move `rows` row-wide payloads over the host DDR bus —
+    the ONE definition of DDR row-traffic time every cost model and
+    offload verdict shares (`pim.graph.FusedSchedule.dma_s`,
+    `pim.queue.QueueSchedule`, `pim.offload`)."""
+    return rows * (row_bits / 8.0) / DDR4_BW_BYTES_S
+
+
 @dataclasses.dataclass(frozen=True)
 class DrimGeometry:
     banks: int = 8

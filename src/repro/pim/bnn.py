@@ -42,7 +42,7 @@ import numpy as np
 
 from repro.core import DRIM_R, DrimGeometry
 from repro.core.subarray import WORD_BITS
-from repro.pim.graph import (BulkGraph, FusedSchedule, execute_graph)
+from repro.pim.graph import BulkGraph, FusedSchedule
 
 
 def counter_bits(k_bits: int) -> int:
@@ -178,8 +178,9 @@ def bnn_dot_drim(a_bits: np.ndarray, b_bits: np.ndarray, *,
     `accumulate` picks the popcount dataflow: "ripple" (the PR 2
     counter) or "carrysave" (the 3:2-compressor tree — strictly fewer
     AAPs on the critical path); `engine`/`mesh`/`n_queues` thread
-    through to `execute_graph`.
+    through the `pim.compiler` pipeline lowering.
     """
+    from repro.pim.compiler import compile as drim_compile
     m, k_bits = a_bits.shape
     n = b_bits.shape[0]
     if accumulate == "ripple":
@@ -189,11 +190,11 @@ def bnn_dot_drim(a_bits: np.ndarray, b_bits: np.ndarray, *,
     else:
         raise ValueError(f"unknown accumulate mode {accumulate!r}")
     feeds, lanes = stage_bnn_planes(a_bits, b_bits)
-    outs, sched = execute_graph(graph, feeds, geom=geom, n_bits=lanes,
-                                engine=engine, mesh=mesh,
-                                n_queues=n_queues)
+    low = drim_compile(graph, geom=geom).lower(engine=engine, mesh=mesh,
+                                               n_queues=n_queues)
+    outs = low.run(feeds, n_bits=lanes)
     count = decode_counts(outs, nbits, lanes)
-    return (2 * count - k_bits).reshape(m, n), sched
+    return (2 * count - k_bits).reshape(m, n), low.schedule
 
 
 def bnn_dot_partitioned(a_bits: np.ndarray, b_bits: np.ndarray, *,
@@ -204,18 +205,19 @@ def bnn_dot_partitioned(a_bits: np.ndarray, b_bits: np.ndarray, *,
     across per-bank command queues.
 
     Disjoint compressor subtrees run on different bank queues
-    concurrently (`pim.queue.execute_partitioned`), with cross-bank
-    fences where subtrees merge — the critical path is the fence-staged
-    slowest queue, not the whole tree.  Bit-exact vs
-    `kernels/ref.py:xnor_gemm_ref` like every other path.
+    concurrently (`lower(partition=True)` — the `pim.queue` MIMD
+    runner), with cross-bank fences where subtrees merge — the critical
+    path is the fence-staged slowest queue, not the whole tree.
+    Bit-exact vs `kernels/ref.py:xnor_gemm_ref` like every other path.
     """
-    from repro.pim.queue import execute_partitioned
+    from repro.pim.compiler import compile as drim_compile
     m, k_bits = a_bits.shape
     n = b_bits.shape[0]
     graph, nbits = bnn_dot_graph_carrysave(k_bits)
     feeds, lanes = stage_bnn_planes(a_bits, b_bits)
-    outs, sched = execute_partitioned(graph, feeds, geom=geom,
-                                      n_bits=lanes, n_queues=n_queues,
-                                      mesh=mesh)
+    low = drim_compile(graph, geom=geom).lower(partition=True,
+                                               n_queues=n_queues,
+                                               mesh=mesh)
+    outs = low.run(feeds, n_bits=lanes)
     count = decode_counts(outs, nbits, lanes)
-    return (2 * count - k_bits).reshape(m, n), sched
+    return (2 * count - k_bits).reshape(m, n), low.schedule

@@ -33,7 +33,6 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AAP, DRIM_R, OP_COPY, OP_DRA, OP_TRA, DrimGeometry, \
@@ -41,8 +40,9 @@ from repro.core import AAP, DRIM_R, OP_COPY, OP_DRA, OP_TRA, DrimGeometry, \
 from repro.core.energy import (E_ACCESS_NJ_PER_KB, E_AAP_NJ_PER_KB,
                                E_IO_NJ_PER_KB)
 from repro.core.subarray import N_XROWS, SubArray, WORD_BITS
-from repro.pim.scheduler import (ENGINES, OP_ARITY, RESULT_ROWS, Schedule,
-                                 _ceil_div, build_program, dispatch_waves)
+from repro.core.timing import ddr_rows_s
+from repro.pim.scheduler import (OP_ARITY, RESULT_ROWS, Schedule,
+                                 _ceil_div, build_program)
 
 # Ops whose charge-sharing read may consume a dying operand row directly.
 _CONSUMING_OPS = frozenset({"xnor2", "xor2", "maj3"})
@@ -652,6 +652,20 @@ class FusedSchedule(Schedule):
     def ddr_rows_saved(self) -> int:
         return self.unfused_ddr_rows_moved - self.ddr_rows_moved
 
+    @property
+    def dma_s(self) -> float:
+        """Host DDR bus time for the fused graph's boundary traffic
+        (operand rows in once, result rows out once) — THE shared
+        DDR-traffic clock (`core.timing.ddr_rows_s`) the queue model
+        and the offload verdicts also price with, so the fused and
+        queued contenders can never disagree on what a moved row
+        costs."""
+        return ddr_rows_s(self.ddr_rows_moved, self.row_bits)
+
+    @property
+    def unfused_dma_s(self) -> float:
+        return ddr_rows_s(self.unfused_ddr_rows_moved, self.row_bits)
+
     def _ddr_energy(self, rows_moved: int) -> float:
         row_kb = self.row_bits / 8.0 / 1024.0
         per_kb = E_ACCESS_NJ_PER_KB + E_IO_NJ_PER_KB
@@ -717,66 +731,22 @@ def execute_graph(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
                   mesh=None, engine: str = "resident",
                   n_queues: Optional[int] = None,
                   ) -> Tuple[Dict[str, jax.Array], FusedSchedule]:
-    """Run the whole fused graph on the simulated fleet.
+    """DEPRECATED shim over the staged pipeline.
 
-    feeds: one flat uint32 word array per graph input, all of equal
-    length W.  Each wave loads the live inputs' tiles for its slots in
-    one DDR window write, executes the single concatenated AAP stream,
-    and reads back only the distinct output rows — intermediates never
-    leave the sub-array.  Outputs whose value is itself a graph input
-    are returned straight from the feed (the compiler loads and reads
-    back nothing for them).  Returns ({output_name: array of length W},
-    schedule).
-
-    `mesh`/`engine`/`n_queues` mirror `scheduler.execute`: the default
-    "resident" engine runs the fused stream trace-time-unrolled on
-    device-resident tiles, sharded over a (chips, banks)
-    `pim.mesh.fleet_mesh` when one is given; "baseline" is the PR 2
-    full-state scan loop; "queued" issues the same fused stream through
-    `n_queues` per-bank command queues (`pim.queue`) and returns a
-    queue-aware `QueueSchedule`.  Splitting the graph itself across
-    queues (MIMD) is `pim.queue.execute_partitioned`.
+    Use ``drim.compile(graph, geom=geom).lower(engine=..., mesh=...,
+    n_queues=...).run(feeds, n_bits=...)`` — or skip hand-building the
+    BulkGraph entirely and trace a Python function with `drim.jit`.
+    This wrapper lowers per call and returns ({output: array}, schedule)
+    exactly as before; the fused execution semantics (one concatenated
+    AAP stream per slot, resident intermediates, alias outputs answered
+    from the feed) live in `pim.compiler.Lowered`.
     """
-    missing = set(graph.input_names) - set(feeds)
-    extra = set(feeds) - set(graph.input_names)
-    if missing or extra:
-        raise ValueError(f"feed mismatch: missing {sorted(missing)}, "
-                         f"unexpected {sorted(extra)}")
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}")
-    fp = compile_graph(graph, row_budget=row_budget)
-
-    arrays = {n: jnp.asarray(feeds[n], jnp.uint32).reshape(-1)
-              for n in graph.input_names}
-    n_words = next(iter(arrays.values())).shape[0]
-    if any(a.shape[0] != n_words for a in arrays.values()):
-        raise ValueError("graph inputs must have equal length")
-    if n_bits is None:
-        n_bits = n_words * WORD_BITS
-    # n_bits marks a ragged tail INSIDE the last word only; oversized
-    # feeds would make the executed wave count silently disagree with
-    # `plan_graph_schedule`'s closed form, so reject them.
-    if not (n_words - 1) * WORD_BITS < n_bits <= n_words * WORD_BITS:
-        raise ValueError(
-            f"n_bits={n_bits} does not match feeds of {n_words} words; "
-            f"expected a value in ({(n_words - 1) * WORD_BITS}, "
-            f"{n_words * WORD_BITS}]")
-
-    tiles = _ceil_div(n_bits, geom.row_bits)
-    waves = _ceil_div(tiles, geom.n_subarrays)
-    results = {name: arrays[src] for name, src in fp.alias_outputs}
-    if fp.device_outputs:
-        # ceil(ceil(n_bits/32) / (row_bits/32)) == ceil(n_bits/row_bits),
-        # so the word-tiled staging agrees with the bit-based plan above.
-        outs, tiles, waves = dispatch_waves(
-            engine, [arrays[n] for n in fp.loaded_inputs], fp.program,
-            fp.readback_rows, n_rows=fp.template_rows, geom=geom,
-            mesh=mesh, n_queues=n_queues)
-        col = {row: i for i, row in enumerate(fp.readback_rows)}
-        for name, row in fp.device_outputs:
-            results[name] = outs[:, col[row]].reshape(-1)[:n_words]
-    sched = _make_fused_schedule(fp, n_bits, tiles, waves, geom)
-    if engine == "queued":
-        from repro.pim.queue import fused_queue_schedule
-        sched = fused_queue_schedule(sched, geom=geom, n_queues=n_queues)
-    return results, sched
+    from repro.pim.compiler import _warn_deprecated, compile as _compile
+    _warn_deprecated(
+        "graph.execute_graph",
+        "compile(graph).lower(engine=..., mesh=..., n_queues=...)"
+        ".run(feeds, n_bits=...)")
+    low = _compile(graph, geom=geom, row_budget=row_budget).lower(
+        engine=engine, mesh=mesh, n_queues=n_queues)
+    results = low.run(feeds, n_bits=n_bits)
+    return results, low.schedule

@@ -47,7 +47,7 @@ from jax.sharding import NamedSharding
 from repro.core import (AAP, CMDS_PER_AAP, DRIM_R, DrimGeometry,
                         simulate_bus_issue)
 from repro.core.subarray import WORD_BITS
-from repro.core.timing import CMD_SLOTS_PER_AAP, DDR4_BW_BYTES_S
+from repro.core.timing import CMD_SLOTS_PER_AAP, ddr_rows_s
 from repro.pim.graph import (DEFAULT_ROW_BUDGET, BulkGraph, FusedSchedule,
                              GraphPartition, partition_graph)
 from repro.pim.mesh import STAGED_SPEC, fleet_mesh
@@ -321,9 +321,9 @@ class QueueSchedule(FusedSchedule):
         """Per-queue busy cycles over the whole payload."""
         return tuple(self.waves * a for a in self.queue_aaps_per_tile)
 
-    # -- host DMA ----------------------------------------------------------
+    # -- host DMA (shared clock: `core.timing.ddr_rows_s`) -----------------
     def _rows_s(self, rows: int) -> float:
-        return rows * (self.row_bits / 8.0) / DDR4_BW_BYTES_S
+        return ddr_rows_s(rows, self.row_bits)
 
     @property
     def dma_s(self) -> float:
@@ -475,9 +475,33 @@ def execute_partitioned(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
                         row_budget: Optional[int] = DEFAULT_ROW_BUDGET,
                         mesh=None,
                         ) -> Tuple[Dict[str, jax.Array], QueueSchedule]:
-    """Run ONE BulkGraph split ACROSS the bank queues (true MIMD).
+    """DEPRECATED shim over the staged pipeline.
 
-    `graph.partition_graph` assigns every node to a queue and a fence
+    Use ``drim.compile(graph, geom=geom).lower(partition=True,
+    n_queues=..., mesh=...).run(feeds, n_bits=...)`` — partitioning is
+    a lowering choice (`compiler.PARTITIONERS`), not a separate entry
+    point.  This wrapper lowers per call and returns
+    ({output: array}, QueueSchedule) exactly as before.
+    """
+    from repro.pim.compiler import _warn_deprecated, compile as _compile
+    _warn_deprecated(
+        "queue.execute_partitioned",
+        "compile(graph).lower(partition=True, n_queues=..., mesh=...)"
+        ".run(feeds, n_bits=...)")
+    low = _compile(graph, geom=geom, row_budget=row_budget).lower(
+        partition=True, n_queues=n_queues, mesh=mesh)
+    results = low.run(feeds, n_bits=n_bits)
+    return results, low.schedule
+
+
+def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
+                         gp: GraphPartition, geom: DrimGeometry,
+                         n_bits: int, mesh=None,
+                         ) -> Tuple[Dict[str, jax.Array], QueueSchedule]:
+    """Run ONE BulkGraph split ACROSS the bank queues (true MIMD) — the
+    pipeline backend behind `lower(partition=...)`.
+
+    The partition (`gp`) assigns every node to a queue and a fence
     stage; within a stage all queues execute their compiled segment
     sub-programs concurrently through `run_waves_queued` (different
     programs, independent counters), and fences order cross-bank
@@ -486,36 +510,18 @@ def execute_partitioned(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
     SIMD engines replicate the whole node list onto every slot.
 
     The functional executor stages each segment's live values per stage
-    (values are values — results are bit-identical to `execute_graph`
+    (values are values — results are bit-identical to the fused path
     and the numpy oracle); the COST model charges only what the
     hardware moves: graph inputs once per queue that reads them,
     cross-bank rows at fences, output rows once.  Same-queue values
-    stay resident in their bank between stages.
+    stay resident in their bank between stages.  `env` holds one
+    pre-validated flat uint32 array per graph input (the compiler's
+    feed checks ran already); it is mutated in place as stages retire.
 
     Returns ({output_name: array}, QueueSchedule).
     """
-    missing = set(graph.input_names) - set(feeds)
-    extra = set(feeds) - set(graph.input_names)
-    if missing or extra:
-        raise ValueError(f"feed mismatch: missing {sorted(missing)}, "
-                         f"unexpected {sorted(extra)}")
-    nq = resolve_n_queues(geom, n_queues)
-    gp = partition_graph(graph, nq, row_budget=row_budget)
-
-    env: Dict[str, jax.Array] = {
-        n: jnp.asarray(feeds[n], jnp.uint32).reshape(-1)
-        for n in graph.input_names}
-    n_words = next(iter(env.values())).shape[0]
-    if any(a.shape[0] != n_words for a in env.values()):
-        raise ValueError("graph inputs must have equal length")
-    if n_bits is None:
-        n_bits = n_words * WORD_BITS
-    if not (n_words - 1) * WORD_BITS < n_bits <= n_words * WORD_BITS:
-        raise ValueError(
-            f"n_bits={n_bits} does not match feeds of {n_words} words; "
-            f"expected a value in ({(n_words - 1) * WORD_BITS}, "
-            f"{n_words * WORD_BITS}]")
-
+    nq = gp.n_parts
+    n_words = next(iter(env.values())).shape[0] if env else 0
     geom_q = dataclasses.replace(geom, banks=geom.banks // nq)
     qmesh = queue_mesh(geom, nq, mesh)
     tiles = _ceil_div(n_bits, geom.row_bits)

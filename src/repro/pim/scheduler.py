@@ -42,6 +42,7 @@ Semantics per op (results read back from the Table-2 destination rows):
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 from typing import Dict, List, Sequence, Tuple
@@ -175,6 +176,35 @@ def encoded_program(op, *, queue: int | None = None,
         while len(_ENCODED_TUPLE_CACHE) > _ENCODED_TUPLE_CACHE_MAX:
             _ENCODED_TUPLE_CACHE.popitem(last=False)
     return out
+
+
+@contextlib.contextmanager
+def fresh_encode_cache():
+    """Run a block against an EMPTY encode memo + stats counter, then
+    restore the process-wide state untouched.
+
+    Cache-accounting tests used to diff `ENCODE_CACHE_STATS` around
+    their calls and tolerate slack for streams other tests had already
+    warmed — order-dependent by construction.  Inside this context the
+    first issue of any program is deterministically a miss, repeats are
+    hits, and exact assertions hold in any test order (the
+    `encode_cache` pytest fixture wraps this).  Yields the (cleared)
+    stats counter."""
+    saved_stats = dict(ENCODE_CACHE_STATS)
+    saved_ops = dict(_ENCODED_CACHE)
+    saved_tuples = collections.OrderedDict(_ENCODED_TUPLE_CACHE)
+    ENCODE_CACHE_STATS.clear()
+    _ENCODED_CACHE.clear()
+    _ENCODED_TUPLE_CACHE.clear()
+    try:
+        yield ENCODE_CACHE_STATS
+    finally:
+        ENCODE_CACHE_STATS.clear()
+        ENCODE_CACHE_STATS.update(saved_stats)
+        _ENCODED_CACHE.clear()
+        _ENCODED_CACHE.update(saved_ops)
+        _ENCODED_TUPLE_CACHE.clear()
+        _ENCODED_TUPLE_CACHE.update(saved_tuples)
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -435,102 +465,64 @@ def dispatch_waves(engine: str, arrays: Sequence[jax.Array],
         (`pim.queue`), each with its own program stream and program
         counter, issued as one MIMD dispatch.
 
-    `execute` and `graph.execute_graph` both route here, so an engine
-    added once is available to plain ops and fused DAGs alike.
-    Returns (outs, tiles, waves) with outs
+    Every lowering routes here, so an engine added once is available to
+    plain ops and fused DAGs alike.  The engine-specific staging and
+    schedule lifting live in `pim.compiler.ENGINE_REGISTRY` — this
+    function is the low-level delegate the pipeline (and the legacy
+    shims) share.  Returns (outs, tiles, waves) with outs
     [waves, len(result_rows), chips, banks, subarrays, row_words].
     """
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}")
-    if engine == "queued":
-        from repro.pim.queue import dispatch_uniform_queued
-        return dispatch_uniform_queued(
-            arrays, program, result_rows, n_rows=n_rows, geom=geom,
-            mesh=mesh, n_queues=n_queues)
-    staged, tiles, waves = stage_rows(
-        arrays, geom=geom, mesh=mesh if engine == "resident" else None)
-    outs = run_waves(staged, program, result_rows, n_rows=n_rows,
-                     mesh=mesh, engine=engine)
-    return outs, tiles, waves
+    from repro.pim.compiler import get_engine
+    eng = get_engine(engine)
+    if not eng.device:
+        raise ValueError(f"engine {engine!r} is a comparator, not a "
+                         "device wave engine")
+    return eng.dispatch(arrays, program, result_rows, n_rows=n_rows,
+                        geom=geom, mesh=mesh, n_queues=n_queues)
 
 
 def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,
             n_bits: int | None = None, mesh=None, engine: str = "resident",
             n_queues: int | None = None,
             ) -> Tuple[Tuple[jax.Array, ...], Schedule]:
-    """Run a bulk op through the simulated device fleet.
+    """DEPRECATED shim over the staged pipeline.
 
-    operands: flat uint32 word arrays, all the same length W (bit-packed,
-    LSB of word 0 first).  `n_bits` defaults to W x 32; a smaller value
-    marks a ragged bit tail (the tail is still computed, the cost model
-    tiles by words either way).  Returns one result array per
-    RESULT_ROWS[op] entry, each of length W, plus the measured Schedule.
-
-    engine="resident" (default) stages device-resident tiles and runs
-    the trace-time-unrolled wave loop (optionally `shard_map`-sharded
-    over a `pim.mesh.fleet_mesh`); engine="baseline" is the PR 2 path
-    (full device state through the vmapped scan interpreter, no mesh) —
-    kept so benchmarks and differential tests can pin the two against
-    each other; engine="queued" splits the bank axis into `n_queues`
-    per-bank command queues with independent program streams
-    (`pim.queue`) and returns the queue-aware `QueueSchedule` (same
-    results, bank-contention + DMA-overlap cost model).
+    Use ``drim.compile(op, geom=geom).lower(engine=..., mesh=...,
+    n_queues=...).run(*operands, n_bits=...)`` — the lowering is
+    reusable across payloads and its measured schedule lands on
+    ``lowered.schedule``.  This wrapper lowers per call and returns
+    (results, schedule) exactly as before.
     """
-    arity = OP_ARITY.get(op)
-    if arity is None:
-        raise ValueError(f"unknown bulk op {op!r}")
-    if len(operands) != arity:
-        raise ValueError(f"{op} takes {arity} operands, got {len(operands)}")
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}")
-    ops = [jnp.asarray(x, jnp.uint32).reshape(-1) for x in operands]
-    n_words = ops[0].shape[0]
-    if any(o.shape[0] != n_words for o in ops):
-        raise ValueError("operands must have equal length")
-    if n_bits is None:
-        n_bits = n_words * WORD_BITS
-    if not 0 < n_bits <= n_words * WORD_BITS:
-        raise ValueError("n_bits out of range for the given operands")
-
-    _, prog, n_aaps = encoded_program(op)
-    result_rows = tuple(RESULT_ROWS[op])
-    outs, tiles, waves = dispatch_waves(
-        engine, ops, prog, result_rows, n_rows=N_DATA_ROWS + N_XROWS,
-        geom=geom, mesh=mesh, n_queues=n_queues)
-    # [waves, n_res, c, b, s, row_w] -> flat wave-major order per result;
-    # only the n_words result words of assigned tiles leave the device.
-    results = tuple(outs[:, i].reshape(-1)[:n_words]
-                    for i in range(len(result_rows)))
-
-    if engine == "queued":
-        from repro.pim.queue import uniform_queue_schedule
-        sched: Schedule = uniform_queue_schedule(
-            op, n_bits=n_bits, geom=geom, tiles=tiles, waves=waves,
-            n_queues=n_queues)
-    else:
-        sched = Schedule(
-            op=op, n_bits=n_bits, row_bits=geom.row_bits, tiles=tiles,
-            slots=geom.n_subarrays, waves=waves, aaps_per_tile=n_aaps,
-            chips=geom.chips, banks=geom.banks,
-            subarrays_per_bank=geom.subarrays_per_bank,
-            t_aap_s=geom.t_aap_s,
-        )
-    return results, sched
+    from repro.pim.compiler import _warn_deprecated, compile as _compile
+    _warn_deprecated(
+        "scheduler.execute",
+        "compile(op).lower(engine=..., mesh=..., n_queues=...).run(...)")
+    low = _compile(op, geom=geom).lower(engine=engine, mesh=mesh,
+                                        n_queues=n_queues)
+    results = low.run(*operands, n_bits=n_bits)
+    return results, low.schedule
 
 
 def execute_oplist(ops: Sequence[Tuple[str, Tuple[jax.Array, ...]]], *,
                    geom: DrimGeometry = DRIM_R, mesh=None,
                    engine: str = "resident", n_queues: int | None = None,
                    ) -> List[Tuple[Tuple[jax.Array, ...], Schedule]]:
-    """Run an op list [(op, operands), ...] back-to-back on the same
-    fleet; total latency/energy is the sum over schedules.
+    """DEPRECATED shim over the staged pipeline.
 
-    This is the UNFUSED baseline: every op reloads its operands over
-    the DDR bus and reads its results back to the host.  Dependent op
-    chains should use `pim.graph.BulkGraph` + `execute_graph`, which
-    compile the whole DAG into one resident AAP stream; the
-    differential suite holds the two paths bit-identical.
+    This was the UNFUSED baseline: every op reloads its operands over
+    the DDR bus and reads its results back to the host.  Lower each op
+    (or better, trace the whole chain with `drim.jit` so it fuses);
+    this wrapper keeps the [(results, schedule), ...] contract for the
+    differential suites.
     """
-    return [execute(op, *args, geom=geom, mesh=mesh, engine=engine,
-                    n_queues=n_queues)
-            for op, args in ops]
+    from repro.pim.compiler import _warn_deprecated, compile as _compile
+    _warn_deprecated("scheduler.execute_oplist",
+                     "compile(op).lower(...).run(...) per op, or "
+                     "drim.jit over the whole chain")
+    out = []
+    for op, args in ops:
+        low = _compile(op, geom=geom).lower(engine=engine, mesh=mesh,
+                                            n_queues=n_queues)
+        res = low.run(*args)
+        out.append((res, low.schedule))
+    return out

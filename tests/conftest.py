@@ -42,3 +42,13 @@ def small_geom():
 def n_examples(fast_mode):
     """Example count for hand-rolled property loops."""
     return 2 if fast_mode else 6
+
+
+@pytest.fixture
+def encode_cache():
+    """An EMPTY encode memo + stats counter for the duration of one
+    test, restored afterwards — cache-accounting assertions become
+    exact and order-independent (`scheduler.fresh_encode_cache`)."""
+    from repro.pim.scheduler import fresh_encode_cache
+    with fresh_encode_cache() as stats:
+        yield stats

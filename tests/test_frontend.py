@@ -1,0 +1,357 @@
+"""Differential suite for the `drim.jit` tracing front-end + pipeline.
+
+The tracer is locked down three ways: a traced program must be
+NODE-IDENTICAL to the hand-built BulkGraph it mirrors (same ops, same
+operand wiring — so it costs exactly what the hand-built graph costs),
+bit-exact against the pure-numpy oracle, and bit-exact across every
+registered device engine through the one `compile -> lower -> run`
+pipeline.  Random programs reuse the random-DAG recipe generator shape
+of `tests/test_graph.py`; the flagship traced workload (XNOR ->
+carry-save popcount BNN dot-product) is pinned against
+`kernels/ref.py:xnor_gemm_ref` on all engines.  Error paths cover
+untraceable operations, shape/dtype mismatches, and re-trace caching.
+
+The CI `frontend-differential` job re-runs this module on a forced
+8-device CPU platform with FRONTEND_ENGINES=queued.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import drim
+from repro.core import DrimGeometry
+from repro.kernels.ref import xnor_gemm_ref
+from repro.pim.bnn import bnn_dot_graph_carrysave, counter_bits
+from repro.pim.compiler import PASS_PIPELINE
+from repro.pim.graph import BulkGraph, graph_ref_results
+from repro.pim.scheduler import OP_ARITY
+
+# The CI queued job narrows this to a single engine; locally all three
+# device engines run.
+ENGINES = tuple(
+    os.environ.get("FRONTEND_ENGINES", "resident,baseline,queued")
+    .split(","))
+
+GEOMS = (
+    DrimGeometry(chips=1, banks=1, subarrays_per_bank=1, row_bits=32),
+    DrimGeometry(chips=1, banks=2, subarrays_per_bank=2, row_bits=64),
+    DrimGeometry(chips=2, banks=2, subarrays_per_bank=2, row_bits=32),
+)
+
+# op name -> traced-stdlib replay; one entry per BulkGraph op, so a
+# random recipe exercises the whole vocabulary.
+_REPLAY = {
+    "copy": lambda a: drim.copy(a),
+    "not": lambda a: ~a,
+    "xnor2": drim.xnor,
+    "xor2": lambda a, b: a ^ b,
+    "maj3": drim.maj,
+    "add": drim.full_add,
+}
+OPS = tuple(sorted(_REPLAY))
+
+
+def random_recipe(rng, max_nodes=8):
+    """A random DAG recipe [(op, operand indices), ...] over value
+    slots, plus the exported value indices — the same shape as
+    `test_graph.random_graph`, but replayable through BOTH builders."""
+    n_inputs = int(rng.integers(1, 5))
+    n_values = n_inputs
+    nodes = []
+    for _ in range(int(rng.integers(1, max_nodes + 1))):
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        opnds = tuple(int(rng.integers(0, n_values))
+                      for _ in range(OP_ARITY[op]))
+        nodes.append((op, opnds))
+        n_values += 2 if op == "add" else 1
+    n_outs = int(rng.integers(1, 4))
+    picks = {n_values - 1} | {int(rng.integers(0, n_values))
+                              for _ in range(n_outs)}
+    return n_inputs, nodes, sorted(picks)
+
+
+def handbuilt_from_recipe(recipe):
+    n_inputs, nodes, picks = recipe
+    g = BulkGraph()
+    values = [g.input(f"in{i}") for i in range(n_inputs)]
+    for op, opnds in nodes:
+        out = g.op(op, *(values[i] for i in opnds))
+        values.extend(out if isinstance(out, tuple) else (out,))
+    for j, vi in enumerate(picks):
+        g.output(f"out{j}", values[vi])
+    return g
+
+
+def traced_from_recipe(recipe):
+    n_inputs, nodes, picks = recipe
+
+    def fn(*args):
+        values = list(args)
+        for op, opnds in nodes:
+            out = _REPLAY[op](*(values[i] for i in opnds))
+            values.extend(out if isinstance(out, tuple) else (out,))
+        return {f"out{j}": values[vi] for j, vi in enumerate(picks)}
+
+    return drim.jit(fn, arg_names=[f"in{i}" for i in range(n_inputs)],
+                    name="recipe")
+
+
+def test_traced_is_node_identical_to_handbuilt(n_examples):
+    """Tracing the stdlib replay of a recipe records the SAME node list
+    (ops + operand value ids) as the hand-built BulkGraph — traced
+    programs pay not one AAP more than hand-assembly."""
+    rng = np.random.default_rng(0x7ACE)
+    for _ in range(max(4, n_examples)):
+        recipe = random_recipe(rng)
+        hand = handbuilt_from_recipe(recipe)
+        traced = traced_from_recipe(recipe).trace()
+        assert traced.graph.nodes == hand.nodes
+        assert traced.graph.input_names == hand.input_names
+        assert traced.graph.outputs == hand.outputs
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_random_recipe_differential(engine, n_examples):
+    """drim.jit-traced == hand-built BulkGraph == numpy oracle, bit for
+    bit, across random recipes, geometries, ragged tails, and every
+    registered device engine."""
+    rng = np.random.default_rng(0xD1FF)
+    for _ in range(n_examples):
+        recipe = random_recipe(rng)
+        geom = GEOMS[int(rng.integers(0, len(GEOMS)))]
+        row_w = geom.row_bits // 32
+        max_words = 2 * geom.n_subarrays * row_w + 3
+        n_words = int(rng.integers(1, max_words + 1))
+        n_bits = int(rng.integers((n_words - 1) * 32 + 1,
+                                  n_words * 32 + 1))
+        arrays = [rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+                  for _ in range(recipe[0])]
+
+        jitted = traced_from_recipe(recipe)
+        got = jitted(*arrays, geom=geom, engine=engine, n_bits=n_bits)
+        oracle = jitted.trace().oracle(*arrays)
+
+        hand = handbuilt_from_recipe(recipe)
+        feeds = {f"in{i}": a for i, a in enumerate(arrays)}
+        hand_low = drim.compile(hand, geom=geom).lower(engine=engine)
+        hand_out = hand_low.run(feeds, n_bits=n_bits)
+        ref = graph_ref_results(hand, feeds)
+
+        assert set(got) == set(oracle) == set(hand_out) == set(ref)
+        for name in ref:
+            np.testing.assert_array_equal(np.asarray(got[name]),
+                                          ref[name])
+            np.testing.assert_array_equal(np.asarray(hand_out[name]),
+                                          ref[name])
+            np.testing.assert_array_equal(oracle[name], ref[name])
+        # one pipeline, one cost model: the traced lowering's schedule
+        # must agree with the hand-built graph's
+        sched = jitted.lower(geom=geom, engine=engine).schedule
+        assert sched.aaps_per_tile == hand_low.schedule.aaps_per_tile
+        assert sched.waves == hand_low.schedule.waves
+
+
+def test_operator_sugar_semantics(small_geom):
+    """`^ & | ~` and select() lower to real DRIM ops (xor2 / maj3
+    against constant planes / not) with numpy bitwise semantics."""
+    rng = np.random.default_rng(3)
+    A, B, C = (rng.integers(0, 1 << 32, 5, dtype=np.uint32)
+               for _ in range(3))
+
+    @drim.jit
+    def fn(a, b, c):
+        return {"xor": a ^ b, "and": a & b, "or": a | b, "inv": ~a,
+                "sel": drim.select(c, a, b)}
+
+    out = fn(A, B, C, geom=small_geom)
+    np.testing.assert_array_equal(np.asarray(out["xor"]), A ^ B)
+    np.testing.assert_array_equal(np.asarray(out["and"]), A & B)
+    np.testing.assert_array_equal(np.asarray(out["or"]), A | B)
+    np.testing.assert_array_equal(np.asarray(out["inv"]), ~A)
+    np.testing.assert_array_equal(np.asarray(out["sel"]),
+                                  (A & C) | (B & ~C))
+    # the constant planes are memoized: ONE reserved zero input and one
+    # `not` node however many & / | the function holds
+    tp = fn.trace()
+    assert tp.const_names == ("__drim_zero__",)
+    assert tp.graph.input_names.count("__drim_zero__") == 1
+
+
+def test_csa_reduce_and_popcount_match_carrysave():
+    """The stdlib popcount is node-for-node the carry-save compressor
+    tree of `bnn.bnn_dot_graph_carrysave` (same op sequence), and its
+    plane count equals counter_bits(K)."""
+    for k in (1, 2, 3, 5, 8, 13):
+        jitted = drim.jit(
+            lambda *planes: drim.popcount(
+                [drim.xnor(planes[i], planes[k + i]) for i in range(k)]),
+            arg_names=[f"a{i}" for i in range(k)]
+            + [f"b{i}" for i in range(k)], name=f"popcount{k}")
+        tp = jitted.trace()
+        hand, nbits = bnn_dot_graph_carrysave(k)
+        assert len(tp.out_names) == nbits == counter_bits(k)
+        # same ops in the same order (value ids shift because the hand
+        # graph declares its zero input eagerly, the tracer lazily)
+        assert [op for op, _, _ in tp.graph.nodes] \
+            == [op for op, _, _ in hand.nodes]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_traced_bnn_dot_bit_exact(engine, small_geom):
+    """ISSUE acceptance: the traced BNN dot-product (XNOR -> carry-save
+    popcount) is bit-exact vs `kernels/ref.py:xnor_gemm_ref` on every
+    engine, including split across queues (partition=True)."""
+    from repro.pim.bnn import decode_counts, stage_bnn_planes
+    rng = np.random.default_rng(0xB17)
+    m, n, k = 5, 6, 12
+    a_bits = rng.integers(0, 2, (m, k)).astype(np.uint8)
+    b_bits = rng.integers(0, 2, (n, k)).astype(np.uint8)
+
+    def bnn(*planes):
+        xs = [drim.xnor(planes[i], planes[k + i]) for i in range(k)]
+        return {f"c{i}": p for i, p in enumerate(drim.popcount(xs))}
+
+    jitted = drim.jit(bnn, arg_names=[f"a{i}" for i in range(k)]
+                      + [f"b{i}" for i in range(k)], name="bnn_dot")
+    feeds, lanes = stage_bnn_planes(a_bits, b_bits)
+    planes = [feeds[f"a{i}"] for i in range(k)] \
+        + [feeds[f"b{i}"] for i in range(k)]
+
+    w32 = -(-k // 32) * 32
+    ap = np.full((m, w32), -1.0, np.float32)
+    ap[:, :k] = np.where(a_bits, 1.0, -1.0)
+    bp = np.full((n, w32), -1.0, np.float32)
+    bp[:, :k] = np.where(b_bits, 1.0, -1.0)
+    from repro.kernels.ref import pack_signs_ref
+    ref = np.asarray(xnor_gemm_ref(pack_signs_ref(ap),
+                                   pack_signs_ref(bp), k))
+
+    variants = [jitted(*planes, geom=small_geom, engine=engine,
+                       n_bits=lanes)]
+    if engine == "queued":
+        variants.append(jitted(*planes, geom=small_geom, partition=True,
+                               n_queues=2, n_bits=lanes))
+    nbits = counter_bits(k)
+    for outs in variants:
+        count = decode_counts(outs, nbits, lanes)
+        got = (2 * count - k).reshape(m, n)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_pipeline_surface(small_geom):
+    """compile/lower/run/cost/verdict hang together: cost(n_bits)
+    equals the measured schedule, the pass pipeline is the registered
+    4-stage one, and verdicts carry uniform rows."""
+    assert [p.name for p in PASS_PIPELINE] \
+        == ["canonicalize", "fuse", "partition", "encode"]
+
+    @drim.jit
+    def fn(a, b):
+        return drim.xnor(a, b) ^ a
+
+    rng = np.random.default_rng(1)
+    n_words = small_geom.n_subarrays * (small_geom.row_bits // 32) + 1
+    A, B = (rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+            for _ in range(2))
+    low = drim.compile(fn, geom=small_geom).lower()
+    out = low.run(A, B)
+    np.testing.assert_array_equal(np.asarray(out), (~(A ^ B)) ^ A)
+    assert low.cost(n_words * 32) == low.schedule
+
+    v = low.verdict(1 << 20)
+    names = [r.contender for r in v.rows]
+    assert names == ["DRIM-fused", "DRIM-unfused", "TPU"]
+    assert v.winner in names
+    for r in v.rows:
+        assert r.latency_s > 0 and r.energy_j > 0
+    # the TPU comparator engine computes the same values via the oracle
+    tpu_out = drim.compile(fn, geom=small_geom).lower(engine="tpu") \
+        .run(A, B)
+    np.testing.assert_array_equal(np.asarray(tpu_out), np.asarray(out))
+
+
+def test_untraceable_operations():
+    """Python control flow / host arithmetic on BitTensors is a
+    TraceError at trace time, not a silent wrong answer."""
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda a: a & 3).trace()            # host scalar
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda a: a + 1).trace()            # arithmetic
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda a: a ^ 1).trace()            # host scalar xor
+
+    def branches(a):
+        if a:                                        # symbolic truth
+            return a
+        return ~a
+    with pytest.raises(drim.TraceError):
+        drim.jit(branches).trace()
+
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda a: list(a)).trace()          # iteration
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda a: 42).trace()               # non-BitTensor out
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda: None).trace()               # no inputs
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda *a: a[0]).trace()            # *args, no names
+
+    # planes cannot cross trace boundaries
+    leaked = {}
+    drim.jit(lambda a: leaked.setdefault("t", a)).trace()
+    with pytest.raises(drim.TraceError):
+        drim.jit(lambda b: drim.xnor(leaked["t"], b)).trace()
+
+
+def test_shape_and_dtype_mismatches(small_geom):
+    """Run-time feed validation: wrong arity, non-integer dtypes and
+    unequal plane lengths are loud errors."""
+    @drim.jit
+    def fn(a, b):
+        return drim.xnor(a, b)
+
+    A = np.arange(4, dtype=np.uint32)
+    with pytest.raises(ValueError):
+        fn(A, geom=small_geom)                       # missing operand
+    with pytest.raises(ValueError):
+        fn(A, A, A, geom=small_geom)                 # extra operand
+    with pytest.raises(drim.TraceError):
+        fn(A, A.astype(np.float32), geom=small_geom)  # float plane
+    with pytest.raises(ValueError):
+        fn(A, A[:2], geom=small_geom)                # unequal lengths
+    with pytest.raises(ValueError):
+        fn(A, A, geom=small_geom, n_bits=999)        # n_bits off feed
+    with pytest.raises(ValueError):
+        drim.compile(fn, geom=small_geom).lower(engine="warp")
+    with pytest.raises(ValueError):
+        drim.compile(fn, geom=small_geom).lower(n_queues=3)
+    with pytest.raises(ValueError):
+        drim.compile("xnor2").lower(partition=True)  # op has no graph
+    with pytest.raises(TypeError):
+        drim.compile(1234)
+
+
+def test_retrace_and_lowering_caches(small_geom):
+    """jit traces once and memoizes one Lowered per lowering signature;
+    repeated calls reuse both."""
+    calls = {"n": 0}
+
+    def fn(a, b):
+        calls["n"] += 1
+        return drim.xnor(a, b)
+
+    jitted = drim.jit(fn)
+    t1 = jitted.trace()
+    t2 = jitted.trace()
+    assert t1 is t2 and calls["n"] == 1
+
+    A = np.arange(6, dtype=np.uint32)
+    jitted(A, A, geom=small_geom)
+    jitted(A, A, geom=small_geom)
+    assert calls["n"] == 1
+    low1 = jitted.lower(geom=small_geom)
+    low2 = jitted.lower(geom=small_geom)
+    assert low1 is low2
+    assert jitted.lower(geom=small_geom, engine="baseline") is not low1
+    assert jitted.last_schedule is not None

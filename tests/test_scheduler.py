@@ -188,24 +188,23 @@ def test_resident_engine_matches_baseline(small_geom):
                                           np.asarray(base))
 
 
-def test_encoded_program_cache_hits():
+def test_encoded_program_cache_hits(encode_cache):
     """Satellite acceptance: the encoded AAP stream is memoized per op —
     repeated plan_schedule/execute calls hit the cache instead of
-    re-encoding, and hits return the very same array object."""
-    from repro.pim.scheduler import ENCODE_CACHE_STATS, encoded_program
+    re-encoding, and hits return the very same array object.  The
+    `encode_cache` fixture starts from an EMPTY memo, so the counts are
+    exact regardless of what ran before."""
+    from repro.pim.scheduler import encoded_program
 
     enc0, prog0, n0 = encoded_program("maj3")
-    hits0 = ENCODE_CACHE_STATS["hits"]
-    misses0 = ENCODE_CACHE_STATS["misses"]
+    assert dict(encode_cache) == {"misses": 1}
     enc1, prog1, n1 = encoded_program("maj3")
-    assert ENCODE_CACHE_STATS["hits"] == hits0 + 1
-    assert ENCODE_CACHE_STATS["misses"] == misses0
+    assert dict(encode_cache) == {"misses": 1, "hits": 1}
     assert enc1 is enc0 and prog1 is prog0 and n1 == n0 == 4
 
     plan_schedule("maj3", 10_000)
     plan_schedule("maj3", 20_000)
-    assert ENCODE_CACHE_STATS["misses"] == misses0
-    assert ENCODE_CACHE_STATS["hits"] == hits0 + 3
+    assert dict(encode_cache) == {"misses": 1, "hits": 3}
 
 
 def test_run_waves_donates_staged_buffer(small_geom):
