@@ -19,6 +19,11 @@ payload grows with the fleet), and measures, per geometry:
                 `pim.mesh.fleet_mesh` (1x1 on a single device; run under
                 XLA_FLAGS=--xla_force_host_platform_device_count=N to
                 exercise real partitioning)
+      pallas    the Pallas AAP interpreter (`kernels/aap_interpreter`):
+                the encoded stream replayed on-device over VMEM-resident
+                row planes — off-TPU this runs in interpret mode, so its
+                row is a correctness checkpoint there; the raw-speed
+                claim is for compiled TPU runs
 
 The PR acceptance assertion runs as part of the benchmark: at DRIM-S
 geometry on a single host the resident path must deliver >= 2x the
@@ -65,7 +70,8 @@ def _bench_path(path: str, geom: DrimGeometry, operands, n_words: int):
     """Wall-clock one execution path end to end (staging -> waves ->
     host readback), warm compile excluded."""
     kwargs = {"baseline": {"engine": "baseline"}, "resident": {},
-              "sharded": {"mesh": fleet_mesh(geom)}}[path]
+              "sharded": {"mesh": fleet_mesh(geom)},
+              "pallas": {"engine": "pallas"}}[path]
     low = drim.compile(OP, geom=geom).lower(**kwargs)
 
     def call():
@@ -90,7 +96,7 @@ def sweep(ladder=GEOM_LADDER, waves=WAVES):
         sched = plan_schedule(OP, n_words * WORD_BITS, geom=geom)
         ref = None
         per_path = {}
-        for path in ("baseline", "resident", "sharded"):
+        for path in ("baseline", "resident", "sharded", "pallas"):
             wall, measured, out = _bench_path(path, geom, operands, n_words)
             assert measured.waves == waves
             if ref is None:
@@ -100,10 +106,14 @@ def sweep(ladder=GEOM_LADDER, waves=WAVES):
             per_path[path] = (wall, measured.tiles / wall)
             record.add(
                 "fleet", op=OP, geometry=_geometry_dict(geom), path=path,
+                engine={"baseline": "baseline", "resident": "resident",
+                        "sharded": "resident", "pallas": "pallas"}[path],
                 rows_per_s=measured.tiles / wall,
                 sim_throughput_bits_s=sched.throughput_bits_s,
                 wall_s=wall, waves=waves, tiles=measured.tiles,
-                n_devices=len(jax.devices()))
+                n_devices=len(jax.devices()),
+                pallas_interpret=(path == "pallas"
+                                  and jax.default_backend() != "tpu"))
         rows.append((label, geom, per_path, sched))
     return rows
 
@@ -116,15 +126,17 @@ def run(csv_rows):
     print(f"\n-- fleet weak scaling: {WAVES} waves of {OP} per point, "
           f"{TIMED_ITERS} timed iters ({len(jax.devices())} device(s)) --")
     print(f"{'point':>10}{'slots':>8}{'sim Tbit/s':>12}"
-          f"{'base Mrow/s':>13}{'resid':>9}{'shard':>9}{'resid x':>9}")
+          f"{'base Mrow/s':>13}{'resid':>9}{'shard':>9}{'pallas':>9}"
+          f"{'resid x':>9}")
     for label, geom, per_path, sched in rows:
         base = per_path["baseline"][1]
         res = per_path["resident"][1]
         sh = per_path["sharded"][1]
+        pal = per_path["pallas"][1]
         print(f"{label:>10}{geom.n_subarrays:>8}"
               f"{sched.throughput_bits_s / 1e12:>12.3f}"
               f"{base / 1e6:>13.2f}{res / 1e6:>9.2f}{sh / 1e6:>9.2f}"
-              f"{res / base:>9.2f}")
+              f"{pal / 1e6:>9.2f}{res / base:>9.2f}")
 
     # Acceptance: >= 2x wall-clock sim throughput over the PR 2 baseline
     # at DRIM-S geometry on a single host (donation + resident staging).

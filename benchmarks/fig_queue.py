@@ -15,7 +15,8 @@ Four lowerings of the same pipeline:
                  they merge (`lower(partition=True)`)
 
 Two phases: a small full-pipeline run holds every lowering (including
-the traced program on every engine) bit-exact vs
+the traced program on every engine, and the Pallas AAP interpreter both
+SIMD and split across MIMD queues) bit-exact vs
 `kernels/ref.py:xnor_gemm_ref`, then a large payload (1M lanes on
 4 Kbit rows — wide enough that element work, not per-op dispatch,
 dominates the CPU simulator) times the device path of each prelowered
@@ -113,6 +114,13 @@ def check_bit_exact(geom=GEOM, m=48, n=48):
                              engine="queued", n_queues=N_QUEUES),
         "partitioned": _bnn_lanes(jitted, a, b, K, geom=geom, mesh=mesh,
                                   partition=True, n_queues=N_QUEUES),
+        # Pallas AAP interpreter, SIMD and split across MIMD queues
+        # (interpret mode off-TPU; unsharded by design)
+        "pallas": _bnn_lanes(jitted, a, b, K, geom=geom,
+                             engine="pallas"),
+        "pallas_mimd": _bnn_lanes(jitted, a, b, K, geom=geom,
+                                  partition=True, engine="pallas",
+                                  n_queues=N_QUEUES),
     }
     for path, got in outs.items():
         np.testing.assert_array_equal(got, ref, err_msg=path)

@@ -7,6 +7,8 @@ from .subarray import (SubArray, make_subarray, load_rows, activate_read,
                        aap_copy, aap_copy2, aap_dra, aap_tra,
                        pack_bits, unpack_bits, WORD_BITS)
 from .isa import (AAP, OP_COPY, OP_COPY2, OP_DRA, OP_TRA, encode, cost,
+                  encode_kernel_stream, kstream_slot, dcc_state_rows,
+                  KSTREAM_COLS,
                   run_program, run_program_py, run_program_unrolled,
                   AAP_COUNTS, CMDS_PER_AAP, simulate_bus_issue,
                   microprogram_copy, microprogram_not, microprogram_maj3,

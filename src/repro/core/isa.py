@@ -27,6 +27,7 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .subarray import (SubArray, aap_copy, aap_copy2, aap_dra, aap_tra)
 
@@ -63,6 +64,77 @@ def encode(program: Sequence[AAP]) -> jax.Array:
 def cost(program: Sequence[AAP]) -> Tuple[int, Counter]:
     c = Counter(ins.op for ins in program)
     return len(program), c
+
+
+# ---------------------------------------------------------------------------
+# Kernel-consumable stream encoding (Pallas AAP interpreter)
+# ---------------------------------------------------------------------------
+#
+# The [n, 5] `encode()` layout keeps word-line addresses symbolic: DCC
+# resolution and the per-type read/write sets live in the interpreter.
+# A Pallas kernel wants all of that decided host-side so the device loop
+# is pure data flow.  `encode_kernel_stream()` therefore lowers a program
+# to an int32 [n, KSTREAM_COLS] table of micro-ops:
+#
+#   col 0        kind: 0 = pass-through (COPY/COPY2), 1 = DRA, 2 = TRA
+#   cols 1..6    three read slots as (state_row, BL̄) pairs
+#   cols 7..18   four write slots as (state_row, BL̄, enable) triples
+#
+# DCC word-lines (>= n_rows) are split statically exactly as
+# `subarray._dcc_split` / `run_program_unrolled`: cell A/B become the two
+# state rows past the normal rows, odd offsets flag the complemented
+# bit-line.  Write slots appear in instruction-arg order because DRA/TRA
+# end their sources at the BL level too (Fig. 6) — the device replays
+# them in order, matching the oracle bit-for-bit.
+
+KSTREAM_COLS = 19
+KSTREAM_KIND_COPY, KSTREAM_KIND_DRA, KSTREAM_KIND_TRA = 0, 1, 2
+
+# Read/write argument positions per AAP type: COPY(src, dst),
+# COPY2(src, d1, d2), DRA and TRA read their sources AND write every arg.
+_KSTREAM_READS = {OP_COPY: (0,), OP_COPY2: (0,),
+                  OP_DRA: (0, 1), OP_TRA: (0, 1, 2)}
+_KSTREAM_WRITES = {OP_COPY: (1,), OP_COPY2: (1, 2),
+                   OP_DRA: (0, 1, 2), OP_TRA: (0, 1, 2, 3)}
+_KSTREAM_KIND = {OP_COPY: KSTREAM_KIND_COPY, OP_COPY2: KSTREAM_KIND_COPY,
+                 OP_DRA: KSTREAM_KIND_DRA, OP_TRA: KSTREAM_KIND_TRA}
+
+
+def dcc_state_rows(n_rows: int) -> int:
+    """State rows backing a template with `n_rows` normal word-lines:
+    the normal rows plus the two DCC cells (A, B)."""
+    return n_rows + 2
+
+
+def kstream_slot(wl: int, n_rows: int) -> Tuple[int, int]:
+    """Resolve a word-line address to a (state row, BL̄ flag) pair.
+
+    Addresses >= n_rows are the dcc1..dcc4 aliases: off//2 picks cell
+    A/B (stored as state rows n_rows and n_rows+1), odd offsets read or
+    write through the complemented bit-line."""
+    if wl < n_rows:
+        return wl, 0
+    off = wl - n_rows
+    return n_rows + off // 2, off % 2
+
+
+def encode_kernel_stream(program: Sequence[AAP], *,
+                         n_rows: int) -> np.ndarray:
+    """Lower an AAP program to the int32 [n, 19] micro-op table the
+    Pallas interpreter executes (`kernels.aap_interpreter`)."""
+    out = np.zeros((len(program), KSTREAM_COLS), np.int32)
+    for i, ins in enumerate(program):
+        out[i, 0] = _KSTREAM_KIND[ins.op]
+        for k, pos in enumerate(_KSTREAM_READS[ins.op]):
+            row, neg = kstream_slot(ins.args[pos], n_rows)
+            out[i, 1 + 2 * k] = row
+            out[i, 2 + 2 * k] = neg
+        for k, pos in enumerate(_KSTREAM_WRITES[ins.op]):
+            row, neg = kstream_slot(ins.args[pos], n_rows)
+            out[i, 7 + 3 * k] = row
+            out[i, 8 + 3 * k] = neg
+            out[i, 9 + 3 * k] = 1
+    return out
 
 
 # ---------------------------------------------------------------------------

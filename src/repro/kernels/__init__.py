@@ -7,3 +7,4 @@ from . import ops, ref
 from .ops import (bitwise, xnor, maj3, full_adder, pack_signs, unpack_signs,
                   xnor_gemm_packed, binary_matmul, bitplane_add, popcount)
 from .flash_attention import flash_attention
+from .aap_interpreter import pallas_wave_fn

@@ -1,0 +1,155 @@
+"""Pallas AAP bit-plane interpreter: the encoded stream as DATA.
+
+The lax engines ("resident"/"queued") specialize the AAP stream at trace
+time — `isa.run_program_unrolled` unrolls every instruction into the XLA
+graph with static word-line addresses.  This kernel is the opposite
+design point, and the closest software analogue of the DRIM sub-array
+itself: the program is lowered host-side to the int32 micro-op table of
+`isa.encode_kernel_stream` and executed on-device by a real program
+counter (`lax.fori_loop` + `lax.switch` over the three sense-amp
+outcomes: pass-through, DRA-XNOR, TRA-MAJ3).  The row-plane block stays
+resident in VMEM across the whole program — rows never round-trip
+through HBM between AAPs, exactly as DRAM rows never leave the sub-array
+between ACTIVATEs.
+
+Grid layout: bulk bit-wise ops make every packed word column
+independent, so one wave's [n_rows_in, chips, banks, subarrays,
+row_words] tile block flattens to [n_rows_in, total_words] and the 1-D
+grid tiles the word axis in `block_cols` chunks — `block_cols ==
+row_words` degenerates to literally one grid cell per sub-array slot;
+the default groups slots so a cell fills the VPU lanes.  Each cell owns
+a fresh zeroed state block of `dcc_state_rows(n_rows)` rows (normal rows
+plus the two DCC cells) and replays the stream over it.
+
+On non-TPU backends the kernel runs under `interpret=True` (the
+functional escape hatch CPU CI uses); set REPRO_PALLAS_INTERPRET=0/1 to
+force either mode.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.isa import (AAP, KSTREAM_COLS, dcc_state_rows,
+                            encode_kernel_stream, kstream_slot)
+
+# Word columns per grid cell: 4096 lane-words x ~32 state rows is
+# ~0.5 MiB of VMEM, far under budget, and a multiple of the 128-lane VPU.
+BLOCK_COLS = 4096
+_LANES = 128
+
+
+def default_interpret() -> bool:
+    """interpret=True everywhere but real TPU; REPRO_PALLAS_INTERPRET
+    (0/1/auto) overrides."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env not in ("", "auto"):
+        return env not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def _negmask(flag: jax.Array) -> jax.Array:
+    """All-ones when `flag` says the access rides the complemented BL̄."""
+    return jnp.where(flag != 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+
+
+def _interp_kernel(n_in: int, n_state: int,
+                   out_slots: Tuple[Tuple[int, int], ...],
+                   stream_ref, in_ref, out_ref):
+    """One grid cell: replay the whole micro-op stream over its columns.
+
+    State rows [0, n_in) hold the staged operand planes; the rest starts
+    as a fresh (zeroed) sub-array.  Reads resolve before writes within
+    one AAP, and the up-to-four write slots replay in instruction-arg
+    order — bit-exact with `run_program_unrolled`.
+    """
+    block = in_ref.shape[1]
+    stream = stream_ref[...]
+    state = jnp.zeros((n_state, block), jnp.uint32)
+    state = jax.lax.dynamic_update_slice(state, in_ref[...], (0, 0))
+
+    def step(i, st):
+        ins = jax.lax.dynamic_slice(stream, (i, 0), (1, KSTREAM_COLS))[0]
+
+        def rd(k):
+            row = jax.lax.dynamic_slice(st, (ins[1 + 2 * k], 0),
+                                        (1, block))[0]
+            return row ^ _negmask(ins[2 + 2 * k])
+
+        r0, r1, r2 = rd(0), rd(1), rd(2)
+        bl = jax.lax.switch(ins[0], (
+            lambda a, b, c: a,                            # COPY/COPY2
+            lambda a, b, c: ~(a ^ b),                     # DRA: BL = XNOR
+            lambda a, b, c: (a & b) | (a & c) | (b & c),  # TRA: MAJ3
+        ), r0, r1, r2)
+        for k in range(4):                     # write slots, in arg order
+            row, neg, en = ins[7 + 3 * k], ins[8 + 3 * k], ins[9 + 3 * k]
+            cur = jax.lax.dynamic_slice(st, (row, 0), (1, block))
+            val = jnp.where(en != 0, (bl ^ _negmask(neg))[None, :], cur)
+            st = jax.lax.dynamic_update_slice(st, val, (row, 0))
+        return st
+
+    if stream.shape[0]:
+        state = jax.lax.fori_loop(0, stream.shape[0], step, state)
+    out_ref[...] = jnp.stack(
+        [~state[row] if neg else state[row] for row, neg in out_slots])
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def pallas_wave_fn(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
+                   n_rows: int, *, interpret: bool | None = None,
+                   block_cols: int = BLOCK_COLS):
+    """Build the `one_wave(tiles)` body behind `engine="pallas"`.
+
+    Same contract as `scheduler.wave_fn`: maps one wave's staged tile
+    block [n_rows_in, chips, banks, subarrays, row_words] to the
+    readback block [len(result_rows), ...].  The stream is encoded
+    host-side once per (program, n_rows) signature; the enclosing
+    `_wave_runner` memoizes the compiled executor.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    out_slots = tuple(kstream_slot(r, n_rows) for r in result_rows)
+
+    if not len(program):
+        # Degenerate stream: readback of an untouched sub-array.
+        def one_wave(tiles: jax.Array) -> jax.Array:
+            zeros = jnp.zeros(tiles.shape[1:], jnp.uint32)
+
+            def pick(row, neg):
+                v = tiles[row] if row < tiles.shape[0] else zeros
+                return ~v if neg else v
+            return jnp.stack([pick(row, neg) for row, neg in out_slots])
+        return one_wave
+
+    stream = jnp.asarray(encode_kernel_stream(program, n_rows=n_rows))
+    n_ins = stream.shape[0]
+    n_state = dcc_state_rows(n_rows)
+    n_out = len(result_rows)
+
+    def one_wave(tiles: jax.Array) -> jax.Array:
+        n_in = tiles.shape[0]
+        flat = tiles.astype(jnp.uint32).reshape(n_in, -1)
+        total = flat.shape[1]
+        bc = min(block_cols, _round_up(total, _LANES))
+        padded = _round_up(total, bc)
+        flat = jnp.pad(flat, ((0, 0), (0, padded - total)))
+        out = pl.pallas_call(
+            functools.partial(_interp_kernel, n_in, n_state, out_slots),
+            grid=(padded // bc,),
+            in_specs=[pl.BlockSpec((n_ins, KSTREAM_COLS), lambda j: (0, 0)),
+                      pl.BlockSpec((n_in, bc), lambda j: (0, j))],
+            out_specs=pl.BlockSpec((n_out, bc), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((n_out, padded), jnp.uint32),
+            interpret=interpret,
+        )(stream, flat)
+        return out[:, :total].reshape((n_out,) + tiles.shape[1:])
+    return one_wave

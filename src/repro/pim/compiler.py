@@ -17,8 +17,8 @@ module collapses all of it:
 
 `lower()` runs a REGISTERED pass pipeline — canonicalize -> fuse ->
 optional partition -> encode (`PASS_PIPELINE`) — and engines live in one
-`EngineRegistry` ("resident", "baseline", "queued", plus the "tpu"
-roofline comparator), each owning its wave dispatch and its schedule
+`EngineRegistry` ("resident", "baseline", "queued", "pallas", plus the
+"tpu" roofline comparator), each owning its wave dispatch and its schedule
 lifting.  Swapping a partitioner (`PARTITIONERS`) or an engine is a
 lowering argument, never a new function: `scheduler.dispatch_waves` and
 the legacy `execute*`/`plan*` surface now delegate here.
@@ -45,13 +45,20 @@ from repro.pim.scheduler import (N_DATA_ROWS, OP_ARITY, RESULT_ROWS,
                                  expected_results)
 
 
-def _warn_deprecated(old: str, new: str) -> None:
+def _warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
     """One shared deprecation channel for the legacy execute*/plan*
     shims; `-W error::DeprecationWarning` turns any lingering caller
-    into a hard failure (the CI example gate does exactly this)."""
+    into a hard failure (the CI example gate does exactly this).
+
+    `stacklevel` counts from `warnings.warn` inside this helper: 3 is
+    right for the direct shims (caller -> shim -> here) — every current
+    shim calls this helper from its own frame, so the warning names the
+    CALLER's file and line.  A shim that ever interposes another wrapper
+    must pass `stacklevel=4` (tests assert the reported filename is the
+    calling module, not this one)."""
     warnings.warn(
         f"{old} is deprecated; use the staged pipeline instead: {new}",
-        DeprecationWarning, stacklevel=3)
+        DeprecationWarning, stacklevel=stacklevel)
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +144,15 @@ def _queued_dispatch(arrays, program, result_rows, *, n_rows, geom,
                                    n_queues=n_queues)
 
 
+def _pallas_dispatch(arrays, program, result_rows, *, n_rows, geom,
+                     mesh=None, n_queues=None):
+    if mesh is not None:
+        raise ValueError("engine 'pallas' runs unsharded — use "
+                         "engine='resident' for shard_map fleet meshes")
+    return _simd_dispatch("pallas")(arrays, program, result_rows,
+                                    n_rows=n_rows, geom=geom)
+
+
 def _lift_op_plain(low: "Lowered", n_bits: int,
                    tiles: Optional[int] = None,
                    waves: Optional[int] = None) -> Schedule:
@@ -186,6 +202,12 @@ ENGINE_REGISTRY.register(Engine(
     "counters, contention + DMA-overlap cost model",
     dispatch=_queued_dispatch, lift_op=_lift_op_queued,
     lift_graph=_lift_graph_queued))
+ENGINE_REGISTRY.register(Engine(
+    "pallas", "Pallas AAP bit-plane interpreter: the encoded stream as "
+    "data, replayed by an on-device program counter over VMEM-resident "
+    "row planes (interpret mode off-TPU)",
+    dispatch=_pallas_dispatch, lift_op=_lift_op_plain,
+    lift_graph=_lift_graph_plain))
 ENGINE_REGISTRY.register(Engine(
     "tpu", "roofline comparator: numpy oracle semantics, TPU v5e "
     "HBM/VPU cost model — the offload verdict's contender",
@@ -315,12 +337,15 @@ def _pass_canonicalize(st: _LoweringState) -> None:
                 f"{', '.join(sorted(PARTITIONERS))})")
         if st.engine_name is None:
             st.engine_name = "queued"
-        elif st.engine_name != "queued":
+        elif st.engine_name not in ("queued", "pallas"):
             raise ValueError("a partitioned graph runs on the queued "
-                             f"engine, not {st.engine_name!r}")
+                             f"(or pallas) engine, not {st.engine_name!r}")
     else:
         st.partition = None
     st.engine = ENGINE_REGISTRY.get(st.engine_name or "resident")
+    if st.engine.name == "pallas" and st.mesh is not None:
+        raise ValueError("engine 'pallas' runs unsharded — use "
+                         "engine='resident' for shard_map fleet meshes")
     if not st.engine.device:
         if st.mesh is not None or st.n_queues is not None:
             raise ValueError(f"engine {st.engine.name!r} is a comparator"
@@ -545,7 +570,9 @@ class Lowered:
         n_bits = self._resolve_n_bits(n_bits, n_words)
         results, sched = _execute_partitioned(
             self.graph, arrays, gp=self.gp, geom=self.geom,
-            n_bits=n_bits, mesh=self.mesh)
+            n_bits=n_bits, mesh=self.mesh,
+            body_engine=("pallas" if self.engine.name == "pallas"
+                         else "queued"))
         self.schedule = sched
         return results
 

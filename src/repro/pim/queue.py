@@ -156,18 +156,20 @@ def stage_rows_queued(arrays: Sequence[jax.Array], *, geom: DrimGeometry,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=256)
-def _queued_runner(programs, result_rows, n_rows, mesh, donate):
-    """Compiled multi-queue executor for one (programs, readbacks, mesh)
-    signature: every queue's stream is a separate trace-time-unrolled
-    specialization of the shared `scheduler.wave_fn` body, issued in ONE
-    jitted computation so XLA schedules the queues concurrently — N
-    independent program counters, one dispatch.  `donate=True` hands
+def _queued_runner(programs, result_rows, n_rows, mesh, donate,
+                   body_engine="queued"):
+    """Compiled multi-queue executor for one (programs, readbacks, mesh,
+    body engine) signature: every queue's stream is a separate
+    specialization of the shared `scheduler.wave_fn` body — trace-time
+    unrolled for "queued", the Pallas interpreter for "pallas" — issued
+    in ONE jitted computation so XLA schedules the queues concurrently:
+    N independent program counters, one dispatch.  `donate=True` hands
     every staged payload to XLA for in-place output reuse (same
     condition as the resident engine's wave runner)."""
     def body(*staged_qs):
         TRACE_COUNTS["wave_body_queued"] += 1
         return tuple(
-            jax.lax.map(wave_fn("queued", prog, rr, nr), st)
+            jax.lax.map(wave_fn(body_engine, prog, rr, nr), st)
             for prog, rr, nr, st in zip(programs, result_rows, n_rows,
                                         staged_qs))
 
@@ -183,8 +185,8 @@ def _queued_runner(programs, result_rows, n_rows, mesh, donate):
 def run_waves_queued(staged_qs: Sequence[jax.Array],
                      programs: Sequence[Sequence[AAP]],
                      result_rows: Sequence[Tuple[int, ...]],
-                     n_rows: Sequence[int], *,
-                     mesh=None) -> Tuple[jax.Array, ...]:
+                     n_rows: Sequence[int], *, mesh=None,
+                     body_engine: str = "queued") -> Tuple[jax.Array, ...]:
     """Execute one wave payload per bank queue, each under its own
     program stream and program counter, in one traced computation.
 
@@ -212,7 +214,7 @@ def run_waves_queued(staged_qs: Sequence[jax.Array],
     donate = all(len(rr) == st.shape[1]
                  for rr, st in zip(result_rows, staged_qs))
     runner = _queued_runner(progs, tuple(tuple(r) for r in result_rows),
-                            tuple(n_rows), mesh, donate)
+                            tuple(n_rows), mesh, donate, body_engine)
     return runner(*staged_qs)
 
 
@@ -497,6 +499,7 @@ def execute_partitioned(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
 def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
                          gp: GraphPartition, geom: DrimGeometry,
                          n_bits: int, mesh=None,
+                         body_engine: str = "queued",
                          ) -> Tuple[Dict[str, jax.Array], QueueSchedule]:
     """Run ONE BulkGraph split ACROSS the bank queues (true MIMD) — the
     pipeline backend behind `lower(partition=...)`.
@@ -517,6 +520,8 @@ def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
     stay resident in their bank between stages.  `env` holds one
     pre-validated flat uint32 array per graph input (the compiler's
     feed checks ran already); it is mutated in place as stages retire.
+    `body_engine` picks each queue's wave body: "queued" (trace-time
+    unrolled lax) or "pallas" (the on-device stream interpreter).
 
     Returns ({output_name: array}, QueueSchedule).
     """
@@ -537,7 +542,8 @@ def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
         outs = run_waves_queued(
             staged_qs, [s.fp.program for s in segs],
             [s.fp.readback_rows for s in segs],
-            [s.fp.template_rows for s in segs], mesh=qmesh)
+            [s.fp.template_rows for s in segs], mesh=qmesh,
+            body_engine=body_engine)
         for s, out in zip(segs, outs):
             col = {row: i for i, row in enumerate(s.fp.readback_rows)}
             for name, row in s.fp.device_outputs:

@@ -301,7 +301,7 @@ def plan_schedule(op: str, n_bits: int, *,
 # counter is wave-count independent.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
-ENGINES = ("resident", "baseline", "queued")
+ENGINES = ("resident", "baseline", "queued", "pallas")
 
 
 def wave_fn(engine: str, program: Tuple[AAP, ...],
@@ -321,11 +321,20 @@ def wave_fn(engine: str, program: Tuple[AAP, ...],
       * "baseline": the PR 2 reference — a fresh full device state per
         wave, the encoded stream through the vmapped `lax.scan`
         interpreter, `device_read_rows` readback.
+      * "pallas": the stream stays DATA — `encode_kernel_stream` lowers
+        it host-side and a `pl.pallas_call` program counter replays it
+        over VMEM-resident row planes (`kernels.aap_interpreter`;
+        interpret mode off-TPU).
 
     All tile shapes are static under trace, so the engine split costs
     nothing at runtime; the differential suites hold the engines
     bit-identical.
     """
+    if engine == "pallas":
+        # Lazy import: the scheduler must not pull Pallas in at import
+        # time for the lax-only engines.
+        from repro.kernels.aap_interpreter import pallas_wave_fn
+        return pallas_wave_fn(program, result_rows, n_rows)
     if engine == "baseline":
         # encode directly: the enclosing runner is already memoized per
         # program, and the op-name `encoded_program` cache would only
@@ -455,7 +464,7 @@ def dispatch_waves(engine: str, arrays: Sequence[jax.Array],
                    *, n_rows: int, geom: DrimGeometry, mesh=None,
                    n_queues: int | None = None,
                    ) -> Tuple[jax.Array, int, int]:
-    """ONE dispatch point for all three wave engines: engine-specific
+    """ONE dispatch point for all the wave engines: engine-specific
     staging, shared wave body (`wave_fn`).
 
       * "resident": device-resident shard-aligned staging, donated
@@ -464,6 +473,8 @@ def dispatch_waves(engine: str, arrays: Sequence[jax.Array],
       * "queued":  the payload is split into per-bank command queues
         (`pim.queue`), each with its own program stream and program
         counter, issued as one MIMD dispatch.
+      * "pallas":  resident staging, the encoded stream replayed by the
+        on-device Pallas interpreter (`kernels.aap_interpreter`).
 
     Every lowering routes here, so an engine added once is available to
     plain ops and fused DAGs alike.  The engine-specific staging and

@@ -27,10 +27,10 @@ from repro.pim.compiler import PASS_PIPELINE
 from repro.pim.graph import BulkGraph, graph_ref_results
 from repro.pim.scheduler import OP_ARITY
 
-# The CI queued job narrows this to a single engine; locally all three
-# device engines run.
+# The CI differential jobs narrow this to a single engine; locally all
+# four device engines run (pallas in interpret mode off-TPU).
 ENGINES = tuple(
-    os.environ.get("FRONTEND_ENGINES", "resident,baseline,queued")
+    os.environ.get("FRONTEND_ENGINES", "resident,baseline,queued,pallas")
     .split(","))
 
 GEOMS = (
@@ -232,6 +232,9 @@ def test_traced_bnn_dot_bit_exact(engine, small_geom):
     if engine == "queued":
         variants.append(jitted(*planes, geom=small_geom, partition=True,
                                n_queues=2, n_bits=lanes))
+    elif engine == "pallas":  # MIMD queues with Pallas wave bodies
+        variants.append(jitted(*planes, geom=small_geom, partition=True,
+                               engine="pallas", n_queues=2, n_bits=lanes))
     nbits = counter_bits(k)
     for outs in variants:
         count = decode_counts(outs, nbits, lanes)

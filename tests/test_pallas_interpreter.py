@@ -1,0 +1,210 @@
+"""Differential suite for the Pallas AAP bit-plane interpreter engine.
+
+Three-way acceptance for `engine="pallas"` (interpret mode on CPU CI):
+the encoded micro-op stream (`isa.encode_kernel_stream`) and the kernel
+that replays it (`kernels.aap_interpreter`) must match BOTH the
+trace-time-unrolled resident engine and the numpy oracle — per Table-2
+op, per random fused DAG, across geometries, ragged bit tails, and
+partitioned (MIMD) queue runs.  `run_program_unrolled` stays the
+untouched semantic oracle for raw stream replay, including DCC
+complemented-bit-line reads/writes and destructive DRA/TRA source
+updates.
+"""
+import numpy as np
+import pytest
+
+import drim
+from repro.core import DrimGeometry
+from repro.core.isa import (AAP, KSTREAM_COLS, OP_COPY, OP_COPY2, OP_DRA,
+                            OP_TRA, dcc_state_rows, encode_kernel_stream,
+                            kstream_slot, run_program_unrolled)
+from repro.core.subarray import N_XROWS
+from repro.pim import OP_ARITY, expected_results, random_operands
+from repro.pim.graph import graph_ref_results
+from repro.pim.scheduler import (ENGINES, N_DATA_ROWS, RESULT_ROWS,
+                                 build_program, dispatch_waves)
+
+from test_graph import GEOMS, random_graph
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Stream encoding
+# ---------------------------------------------------------------------------
+
+def test_kernel_stream_layout():
+    """Hand-checked lowering: kinds, read slots, write slots in arg
+    order, and static DCC resolution (cell = off//2, BL̄ = off%2)."""
+    n_rows = 16
+    prog = (AAP(OP_COPY, (3, n_rows + 1)),        # write dcc2: cell A, BL̄
+            AAP(OP_COPY2, (n_rows + 2, 4, 5)),    # read dcc3: cell B, BL
+            AAP(OP_DRA, (1, 2, 7)),
+            AAP(OP_TRA, (1, 2, 3, n_rows + 3)))   # write dcc4: cell B, BL̄
+    enc = encode_kernel_stream(prog, n_rows=n_rows)
+    assert enc.shape == (4, KSTREAM_COLS) and enc.dtype == np.int32
+
+    kind, reads, writes = enc[:, 0], enc[:, 1:7], enc[:, 7:]
+    assert list(kind) == [0, 0, 1, 2]
+    # COPY 3 -> dcc2: one read (3, BL), one enabled write (row 16, BL̄)
+    assert list(reads[0][:2]) == [3, 0]
+    assert list(writes[0][:3]) == [n_rows, 1, 1]
+    assert not writes[0][5::3].any()              # slots 1..3 disabled
+    # COPY2 reads through cell B's true bit-line, writes 4 then 5
+    assert list(reads[1][:2]) == [n_rows + 1, 0]
+    assert list(writes[1][:6]) == [4, 0, 1, 5, 0, 1]
+    # DRA writes ALL THREE args (sources end at the BL level)
+    assert list(writes[2][:9]) == [1, 0, 1, 2, 0, 1, 7, 0, 1]
+    assert writes[2][9 + 2] == 0
+    # TRA writes all four, the last through cell B's BL̄
+    assert list(writes[3][9:12]) == [n_rows + 1, 1, 1]
+    assert writes[3][2::3].all()
+
+    assert kstream_slot(n_rows - 1, n_rows) == (n_rows - 1, 0)
+    assert kstream_slot(n_rows + 0, n_rows) == (n_rows, 0)
+    assert kstream_slot(n_rows + 3, n_rows) == (n_rows + 1, 1)
+    assert dcc_state_rows(n_rows) == n_rows + 2
+
+
+def _random_program(rng, n_rows, n_ins):
+    """Random AAP soup over every word-line INCLUDING the four DCC
+    aliases — exercises aliasing, destructive sources, and BL̄ paths the
+    curated Table-2 microprograms never hit together."""
+    arity = {OP_COPY: 2, OP_COPY2: 3, OP_DRA: 3, OP_TRA: 4}
+    return tuple(
+        AAP(op, tuple(int(rng.integers(0, n_rows + 4))
+                      for _ in range(arity[op])))
+        for op in (int(rng.integers(0, 4)) for _ in range(n_ins)))
+
+
+def test_kernel_replay_matches_unrolled_oracle(n_examples):
+    """Raw stream replay vs `run_program_unrolled`, row by row, DCC
+    cells included."""
+    from repro.kernels.aap_interpreter import pallas_wave_fn
+    rng = np.random.default_rng(42)
+    n_rows, n_in = 10, 4
+    readback = tuple(range(n_rows)) + tuple(range(n_rows, n_rows + 4))
+    for trial in range(max(3, n_examples)):
+        prog = _random_program(rng, n_rows, n_ins=1 + 3 * trial)
+        tiles = rng.integers(0, 2**32, (n_in, 2, 6), dtype=np.uint32)
+
+        got = np.asarray(pallas_wave_fn(prog, readback, n_rows)
+                         (jnp.asarray(tiles)))
+
+        zeros = np.zeros(tiles.shape[1:], np.uint32)
+        rows = {i: tiles[i] for i in range(n_in)}
+        rows, dcc = run_program_unrolled(prog, rows, {}, n_rows=n_rows,
+                                         zeros=zeros)
+        for i, wl in enumerate(readback):
+            if wl < n_rows:
+                want = np.asarray(rows.get(wl, zeros))
+            else:
+                off = wl - n_rows
+                v = np.asarray(dcc.get(off // 2, zeros))
+                want = ~v if off % 2 else v
+            np.testing.assert_array_equal(got[i], want, err_msg=str(
+                (trial, wl, prog)))
+
+
+# ---------------------------------------------------------------------------
+# Engine differential: ops, graphs, partitions
+# ---------------------------------------------------------------------------
+
+def test_pallas_engine_matches_resident_all_ops(small_geom):
+    """pallas == resident == numpy oracle on a ragged multi-wave payload
+    for every Table-2 op, with identical measured schedules."""
+    row_w = small_geom.row_bits // 32
+    n_words = 2 * small_geom.n_subarrays * row_w + 5
+    for op in sorted(OP_ARITY):
+        args = random_operands(op, n_words, seed=len(op))
+        n_bits = n_words * 32 - 7
+        low_p = drim.compile(op, geom=small_geom).lower(engine="pallas")
+        low_r = drim.compile(op, geom=small_geom).lower()
+        res_p = low_p.run(*args, n_bits=n_bits)
+        res_r = low_r.run(*args, n_bits=n_bits)
+        assert low_p.schedule == low_r.schedule
+        for got, res, want in zip(res_p, res_r, expected_results(op, args)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(res))
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=lambda g: (
+    f"{g.chips}x{g.banks}x{g.subarrays_per_bank}x{g.row_bits}"))
+def test_random_dag_pallas_differential(geom, n_examples):
+    """Random fused DAGs across geometries and ragged tails: the Pallas
+    interpreter, the resident engine, and the numpy oracle agree
+    bit-for-bit; schedules and verdict rows are engine-identical."""
+    rng = np.random.default_rng(geom.banks * 1000 + geom.row_bits)
+    row_w = geom.row_bits // 32
+    for trial in range(n_examples):
+        g = random_graph(rng)
+        n_words = int(rng.integers(1, 3 * geom.n_subarrays * row_w + 2))
+        n_bits = int(rng.integers((n_words - 1) * 32 + 1, n_words * 32 + 1))
+        feeds = {n: rng.integers(0, 2**32, n_words, dtype=np.uint32)
+                 for n in g.input_names}
+        ref = graph_ref_results(g, feeds)
+
+        low_p = drim.compile(g, geom=geom).lower(engine="pallas")
+        low_r = drim.compile(g, geom=geom).lower()
+        out_p = low_p.run(feeds, n_bits=n_bits)
+        out_r = low_r.run(feeds, n_bits=n_bits)
+        assert low_p.schedule == low_r.schedule
+        assert low_p.cost(n_bits) == low_r.cost(n_bits)
+        assert low_p.verdict(n_bits) == low_r.verdict(n_bits)
+        for name, want in ref.items():
+            np.testing.assert_array_equal(np.asarray(out_p[name]), want)
+            np.testing.assert_array_equal(np.asarray(out_p[name]),
+                                          np.asarray(out_r[name]))
+
+
+def test_partitioned_pallas_differential(n_examples):
+    """MIMD path: per-bank queues running Pallas interpreter bodies ==
+    queued lax bodies == oracle, same QueueSchedule."""
+    geom = DrimGeometry(chips=1, banks=2, subarrays_per_bank=2,
+                        row_bits=64)
+    rng = np.random.default_rng(11)
+    for trial in range(n_examples):
+        g = random_graph(rng)
+        n_words = int(rng.integers(1, 20))
+        feeds = {n: rng.integers(0, 2**32, n_words, dtype=np.uint32)
+                 for n in g.input_names}
+        ref = graph_ref_results(g, feeds)
+        low_p = drim.compile(g, geom=geom).lower(
+            partition=True, engine="pallas", n_queues=2)
+        low_q = drim.compile(g, geom=geom).lower(partition=True,
+                                                 n_queues=2)
+        out_p = low_p.run(feeds)
+        out_q = low_q.run(feeds)
+        assert low_p.schedule == low_q.schedule
+        for name, want in ref.items():
+            np.testing.assert_array_equal(np.asarray(out_p[name]), want)
+            np.testing.assert_array_equal(np.asarray(out_p[name]),
+                                          np.asarray(out_q[name]))
+
+
+# ---------------------------------------------------------------------------
+# Registration / surface
+# ---------------------------------------------------------------------------
+
+def test_pallas_engine_registered(small_geom):
+    assert "pallas" in drim.engines()
+    assert "pallas" in ENGINES
+    eng = drim.get_engine("pallas")
+    assert eng.device and eng.dispatch is not None
+    # selectable through scheduler.dispatch_waves too
+    a, b = random_operands("xnor2", 12, seed=5)
+    outs, tiles, waves = dispatch_waves(
+        "pallas", [jnp.asarray(a), jnp.asarray(b)],
+        tuple(build_program("xnor2")), tuple(RESULT_ROWS["xnor2"]),
+        n_rows=N_DATA_ROWS + N_XROWS, geom=small_geom)
+    np.testing.assert_array_equal(
+        np.asarray(outs[:, 0].reshape(-1)[:12]), ~(a ^ b))
+
+
+def test_pallas_engine_rejects_mesh_and_queues(small_geom):
+    with pytest.raises(ValueError, match="unsharded"):
+        drim.compile("xnor2", geom=small_geom).lower(engine="pallas",
+                                                     mesh=object())
+    with pytest.raises(ValueError, match="n_queues"):
+        drim.compile("xnor2", geom=small_geom).lower(engine="pallas",
+                                                     n_queues=2)

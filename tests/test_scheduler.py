@@ -207,6 +207,73 @@ def test_encoded_program_cache_hits(encode_cache):
     assert dict(encode_cache) == {"misses": 1, "hits": 3}
 
 
+def test_encoded_program_tuple_lru_lifecycle(encode_cache):
+    """Exact tuple-LRU lifecycle: miss -> unmaterialized entry -> plain
+    hit -> IN-PLACE materialization on a later materializing hit (booked
+    as a hit, not a re-miss) -> memoized array identity afterwards."""
+    from repro.core import AAP, OP_COPY
+    from repro.pim.scheduler import build_program, encoded_program
+
+    prog = tuple(build_program("xnor2"))
+    enc, p, n = encoded_program(prog, materialize=False)
+    assert enc is None and p == prog and n == len(prog)
+    assert dict(encode_cache) == {"misses": 1}
+
+    enc, _, _ = encoded_program(prog, materialize=False)   # plain hit
+    assert enc is None
+    assert dict(encode_cache) == {"misses": 1, "hits": 1}
+
+    enc2, p2, _ = encoded_program(prog)      # materializing hit, in place
+    assert enc2 is not None and enc2.shape == (len(prog), 5)
+    assert p2 == prog
+    assert dict(encode_cache) == {"misses": 1, "hits": 2}
+
+    enc3, _, _ = encoded_program(prog, materialize=False)
+    assert enc3 is enc2                      # filled entry stays filled
+    assert dict(encode_cache) == {"misses": 1, "hits": 3}
+
+    # per-queue tagging books on the queue's own counters too
+    encoded_program(prog, queue=1, materialize=False)
+    assert dict(encode_cache) == {"misses": 1, "hits": 4, "q1:hits": 1}
+    # ...and never leaks into the op-name side
+    encoded_program("xnor2")
+    assert dict(encode_cache) == {"misses": 2, "hits": 4, "q1:hits": 1}
+
+
+def test_encoded_program_tuple_lru_eviction(encode_cache, monkeypatch):
+    """Eviction at the cap: LRU order honours hits (`move_to_end`), the
+    cap is NEVER exceeded, and an evicted stream re-misses cleanly."""
+    from repro.core import AAP, OP_COPY
+    from repro.pim import scheduler
+    from repro.pim.scheduler import encoded_program
+
+    assert scheduler._ENCODED_TUPLE_CACHE_MAX == 512   # documented cap
+    monkeypatch.setattr(scheduler, "_ENCODED_TUPLE_CACHE_MAX", 4)
+
+    def prog(i):  # distinct lengths -> distinct cheap tuple keys
+        return (AAP(OP_COPY, (0, 1)),) * (i + 1)
+
+    for i in range(4):
+        encoded_program(prog(i), materialize=False)
+    assert len(scheduler._ENCODED_TUPLE_CACHE) == 4
+    assert dict(encode_cache) == {"misses": 4}
+
+    encoded_program(prog(0), materialize=False)   # touch the oldest...
+    encoded_program(prog(4), materialize=False)   # ...so prog(1) evicts
+    assert len(scheduler._ENCODED_TUPLE_CACHE) == 4
+    assert prog(0) in scheduler._ENCODED_TUPLE_CACHE
+    assert prog(1) not in scheduler._ENCODED_TUPLE_CACHE
+    assert dict(encode_cache) == {"misses": 5, "hits": 1}
+
+    encoded_program(prog(1), materialize=False)   # evicted -> re-miss
+    assert dict(encode_cache) == {"misses": 6, "hits": 1}
+
+    for i in range(10, 20):                       # hammering never overflows
+        encoded_program(prog(i), materialize=False)
+        assert len(scheduler._ENCODED_TUPLE_CACHE) <= 4
+    assert dict(encode_cache) == {"misses": 16, "hits": 1}
+
+
 def test_run_waves_donates_staged_buffer(small_geom):
     """Satellite acceptance: the staged operand buffer is donated to XLA
     and its memory is reused for the readback when shapes allow (copy:
