@@ -1,0 +1,141 @@
+"""Serving figure: BNN LM decode through DRIM vs the native TPU path.
+
+Sweeps the `launch.serve` static-batch decode loop over engines x batch
+sizes on a tiny CPU-scale drim-bnn geometry, asserting every engine's
+greedy token stream is IDENTICAL to the native TPU path at
+temperature 0 (the bf16 STE matmul and the exact XNOR-popcount integer
+dot agree bitwise), and records measured tok/s + p50/p99 step latency
+next to the analytic TPU-roofline Verdict for the decode-step GEMM
+workload (`pim.offload.serving_verdict`: the BitLinear FFN shapes x
+n_layers, priced through the SAME cached lowerings the serving path
+executes).
+
+Records land in BENCH_serve.json via `benchmarks.record`.
+
+    PYTHONPATH=src python -m benchmarks.fig_serve
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import record
+from repro.launch import serve
+from repro.pim.offload import Verdict, VerdictRow, serving_verdict
+
+ENGINES = ("tpu", "resident")
+BATCHES = (2, 4)
+GEN = 5
+TINY = ["--arch", "drim-bnn", "--smoke-config", "--layers", "2",
+        "--d-model", "32", "--d-ff", "64", "--heads", "2",
+        "--kv-heads", "1", "--d-head", "16", "--vocab", "128",
+        "--prompt-len", "8", "--gen", str(GEN)]
+
+
+def _sum_verdicts(verdicts) -> Verdict:
+    """Sum every contender row across a model's GEMM shapes — the decode
+    step runs them back to back, so latencies/energy add."""
+    acc, order = {}, []
+    n_bits = n_nodes = 0
+    for v in verdicts:
+        n_bits += v.n_bits
+        n_nodes += v.n_nodes
+        for r in v.rows:
+            p = acc.get(r.contender)
+            if p is None:
+                order.append(r.contender)
+                p = VerdictRow(contender=r.contender, latency_s=0.0,
+                               compute_s=0.0, dma_s=0.0, energy_j=0.0,
+                               aaps=0, ddr_rows_moved=0)
+            acc[r.contender] = VerdictRow(
+                contender=r.contender, latency_s=p.latency_s + r.latency_s,
+                compute_s=p.compute_s + r.compute_s,
+                dma_s=p.dma_s + r.dma_s, energy_j=p.energy_j + r.energy_j,
+                aaps=p.aaps + r.aaps,
+                ddr_rows_moved=p.ddr_rows_moved + r.ddr_rows_moved)
+    return Verdict(workload="bitlinear_decode_step", n_bits=n_bits,
+                   n_nodes=n_nodes, rows=tuple(acc[c] for c in order))
+
+
+def decode_step_verdict(batch: int, d_model: int = 32, d_ff: int = 64,
+                        n_layers: int = 2) -> Verdict:
+    """The roofline Verdict for ONE decode step's BitLinear GEMMs: the
+    FFN gate/up/down matmuls x n_layers (bitlinear='ffn' on drim-bnn)."""
+    shapes = ([(batch, d_ff, d_model)] * 2       # gate, up: [b,dm]x[dm,dff]
+              + [(batch, d_model, d_ff)])        # down:     [b,dff]x[dff,dm]
+    return _sum_verdicts(serving_verdict(m, n, k)
+                         for _ in range(n_layers)
+                         for m, n, k in shapes)
+
+
+def run(csv_rows):
+    t0 = time.time()
+    results = {}
+    for batch in BATCHES:
+        for engine in ENGINES:
+            args = serve.parse_args(TINY + ["--batch", str(batch),
+                                            "--engine", engine])
+            gen, stats = serve.run_serve(args)
+            results[(engine, batch)] = (gen, stats)
+        ref = results[("tpu", batch)][0]
+        for engine in ENGINES:
+            got = results[(engine, batch)][0]
+            np.testing.assert_array_equal(
+                got, ref, err_msg=f"engine {engine!r} diverged from the "
+                f"TPU token stream at batch {batch}")
+    us = (time.time() - t0) * 1e6
+
+    print(f"\n-- drim-bnn decode: {len(ENGINES)} engines x "
+          f"{len(BATCHES)} batch sizes, gen={GEN}, greedy streams "
+          "identical across engines --")
+    print(f"{'engine':>10}{'batch':>7}{'tok/s':>10}{'p50 ms':>9}"
+          f"{'p99 ms':>9}{'compile s':>11}{'verdict':>14}{'DRIMx':>7}")
+    for batch in BATCHES:
+        v = decode_step_verdict(batch)
+        drim_row = v.row("DRIM-fused")
+        tpu_row = v.row("TPU")
+        speedup = v.speedup("DRIM-fused", "TPU")
+        for engine in ENGINES:
+            _, s = results[(engine, batch)]
+            print(f"{engine:>10}{batch:>7}{s['decode_tok_per_s']:>10}"
+                  f"{s['decode_p50_ms']:>9}{s['decode_p99_ms']:>9}"
+                  f"{s['compile_s']:>11}{v.winner:>14}{speedup:>7.2f}")
+            record.add(
+                "serve", op="bnn_decode", engine=engine, batch=batch,
+                gen=GEN, tok_per_s=s["decode_tok_per_s"],
+                p50_ms=s["decode_p50_ms"], p99_ms=s["decode_p99_ms"],
+                compile_s=s["compile_s"], prefill_s=s["prefill_s"],
+                sample_ids=s["sample_ids"],
+                verdict_winner=v.winner,
+                verdict_speedup_drim_over_tpu=speedup,
+                drim_latency_s=drim_row.latency_s,
+                tpu_latency_s=tpu_row.latency_s,
+                drim_energy_j=drim_row.energy_j,
+                tpu_energy_j=tpu_row.energy_j)
+        csv_rows.append((f"fig_serve[b={batch}]", us / len(BATCHES),
+                         f"winner={v.winner}"))
+
+    # microbench split + one continuous-batching run, recorded alongside
+    _, mb = serve.run_microbench(serve.parse_args(
+        TINY + ["--batch", str(BATCHES[0]), "--microbench"]))
+    record.add("serve", op="microbench", engine="tpu", batch=BATCHES[0],
+               **{f"{stage}_{k}": v for stage, d in mb["microbench"].items()
+                  for k, v in d.items()})
+    _, cont = serve.run_continuous(serve.parse_args(
+        TINY + ["--batch", str(BATCHES[0]), "--continuous", "3"]))
+    record.add("serve", op="continuous", engine="tpu",
+               n_slots=cont["n_slots"], n_requests=cont["n_requests"],
+               n_waves=cont["n_waves"], tok_per_s=cont["tok_per_s"],
+               mean_active_slots=cont["mean_active_slots"])
+    print(f"microbench: {mb['microbench']}")
+    print(f"continuous: {cont['n_requests']} requests / "
+          f"{cont['n_slots']} slots in {cont['n_waves']} waves, "
+          f"mean occupancy {cont['mean_active_slots']}")
+    return results
+
+
+if __name__ == "__main__":
+    run([])
+    for path in record.flush("."):
+        print(f"wrote {path}")

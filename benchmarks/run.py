@@ -1,6 +1,9 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only a,b] [--json-dir DIR]
+    PYTHONPATH=src python benchmarks/run.py serve      # positional subset
+                                                       # ("serve" is short
+                                                       # for "fig_serve")
 
 Runs:
     fig8_throughput     Fig. 8  — bulk bit-wise throughput, 8 platforms
@@ -10,6 +13,9 @@ Runs:
                                   vs donated execution paths
     fig_queue           queue   — per-bank async command queues: SIMD
                                   ripple vs MIMD carry-save popcount
+    fig_serve           serve   — BNN LM decode tok/s + tail latency
+                                  per engine vs the TPU-roofline
+                                  Verdict (BENCH_serve.json)
     table3_reliability  Table 3 — Monte-Carlo process-variation error
     roofline            brief   — 3-term roofline from the dry-run
     kernel_adjusted     brief   — kernel-adjusted memory roofline
@@ -30,8 +36,8 @@ import sys
 import traceback
 
 from benchmarks import (fig8_throughput, fig9_energy, fig_fleet,
-                        fig_fusion, fig_queue, kernel_adjusted, record,
-                        table3_reliability, roofline)
+                        fig_fusion, fig_queue, fig_serve, kernel_adjusted,
+                        record, table3_reliability, roofline)
 
 MODULES = (
     ("fig8_throughput", fig8_throughput),
@@ -39,14 +45,29 @@ MODULES = (
     ("fig_fusion", fig_fusion),
     ("fig_fleet", fig_fleet),
     ("fig_queue", fig_queue),
+    ("fig_serve", fig_serve),
     ("table3_reliability", table3_reliability),
     ("roofline", roofline),
     ("kernel_adjusted", kernel_adjusted),
 )
 
 
+def _resolve(name: str):
+    """Accept both the full module name and the short figure alias
+    ('serve' -> 'fig_serve', 'queue' -> 'fig_queue', ...)."""
+    known = {n for n, _ in MODULES}
+    if name in known:
+        return name
+    if f"fig_{name}" in known:
+        return f"fig_{name}"
+    return None
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("benches", nargs="*", default=[],
+                    help="benchmark names to run (default: all); short "
+                    "aliases accepted, e.g. 'serve' for 'fig_serve'")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks to run")
     ap.add_argument("--json-dir", default=".",
@@ -60,12 +81,16 @@ def main(argv=None) -> None:
             print(name)
         return
     selected = MODULES
+    wanted = set(args.benches)
     if args.only:
-        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
-        unknown = wanted - {name for name, _ in MODULES}
+        wanted |= {w.strip() for w in args.only.split(",") if w.strip()}
+    if wanted:
+        resolved = {w: _resolve(w) for w in wanted}
+        unknown = sorted(w for w, r in resolved.items() if r is None)
         if unknown:
-            ap.error(f"unknown benchmarks: {sorted(unknown)}")
-        selected = [(n, m) for n, m in MODULES if n in wanted]
+            ap.error(f"unknown benchmarks: {unknown}")
+        names = {r for r in resolved.values()}
+        selected = [(n, m) for n, m in MODULES if n in names]
 
     csv_rows = []
     failures = []

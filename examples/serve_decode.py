@@ -1,12 +1,21 @@
 """Batched serving example: prefill a prompt batch, decode greedily.
 
     PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py --engine resident
     PYTHONPATH=src python examples/serve_decode.py --arch qwen3-14b  # smoke
 
 Drives the production serving path (static-shape KV caches, jitted
 prefill + decode steps, batched sampling) on a CPU-scale config. Any
 assigned architecture id works — smoke-config geometry keeps it laptop-
 sized; the same code path lowers at full scale in the multi-pod dry-run.
+
+Extra flags pass through to `repro.launch.serve`: `--engine
+{tpu,resident,baseline,queued,pallas}` routes BitLinear decode matmuls
+through the drim.jit carry-save pipeline on the simulated DRIM fleet
+(greedy token ids stay IDENTICAL to the native TPU path), `--packed`
+serves from bit-packed weights with a bit-exactness assert, and
+`--microbench` / `--continuous N` select the prefill/insert/generate
+split and the continuous-batching wave scheduler.
 """
 import argparse
 

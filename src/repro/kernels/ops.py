@@ -16,6 +16,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .bitwise import bitwise as _bitwise_pallas
@@ -82,6 +83,27 @@ def unpack_signs(p, dtype=jnp.bfloat16):
     else:
         out = _unpack_pallas(p2, dtype, interpret=(m == "interpret"))
     return out.reshape(*lead, out.shape[-1])
+
+
+def sign_bits(x):
+    """[..., K] values -> {0, 1} sign bits (1 where x >= 0), uint8.
+
+    The sign convention every packed/DRIM path shares: bit 1 encodes
+    +1, matching `pack_signs` / `ref.pack_signs_ref` little-endian
+    words and `pim.bnn.stage_bnn_planes` lane planes.
+    """
+    return (jnp.asarray(x) >= 0).astype(jnp.uint8)
+
+
+def unpack_sign_bits_np(packed, k_bits: int):
+    """Host-side inverse of `pack_signs` word layout: [..., W] uint32
+    little-endian sign words -> [..., k_bits] {0, 1} uint8 bits (the
+    pad bits beyond k_bits are dropped).  Numpy in, numpy out — the
+    DRIM serving route unpacks weights once per layer on the host."""
+    words = np.ascontiguousarray(np.asarray(packed, np.uint32))
+    bits = np.unpackbits(words.view(np.uint8).reshape(*words.shape[:-1], -1),
+                         axis=-1, bitorder="little")
+    return bits[..., :k_bits]
 
 
 # --- binary GEMM -------------------------------------------------------------

@@ -1,0 +1,263 @@
+"""Continuous-batching request scheduler: concurrent decode requests
+packed into shared waves over a fixed KV-cache slot pool.
+
+`launch.serve` decodes ONE static batch that all arrived at t=0; real
+traffic arrives continuously.  This module adds iteration-level
+scheduling (the Orca discipline, via the maxtext prefill → insert →
+generate decomposition):
+
+  * an arriving request is PREFILLED at batch 1, its cache spliced into
+    a free slot (`insert_request` ZEROES the slot first — GQA decode
+    cache writes are additive one-hot updates, so a reused slot must
+    never keep a previous tenant's K/V), and its first token comes from
+    the prefill logits;
+  * every wave runs ONE shared decode step over all active slots — a
+    late arrival joins the NEXT wave instead of launching its own
+    decode stream;
+  * positions advance per request; a finished request frees its slot at
+    the wave boundary and the freed slot is re-admitted from the
+    pending queue on the very next wave.
+
+The decode function comes from `make_decode_fn`, which is also what
+`launch.serve` uses for its static loop: jitted native decode for the
+"tpu" engine, eager per-layer decode under `layers.serving_engine` for
+DRIM engines.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (decode_step, decode_step_eager, empty_caches,
+                          prefill)
+from repro.models.layers import serving_engine
+
+
+def make_decode_fn(cfg, ctx_len: int, temperature: float = 0.0,
+                   engine: Optional[str] = None,
+                   n_queues: Optional[int] = None) -> Callable:
+    """(params, tok [B,1], caches, pos [B], key) -> (next_tok [B,1], caches).
+
+    engine None/"tpu": one jitted native decode+sample step.  Any DRIM
+    device engine: an eager per-layer decode under `serving_engine`, so
+    BitLinear GEMMs dispatch to the simulated fleet host-side.
+    """
+    drim = False
+    if engine is not None:
+        from repro.pim.compiler import get_engine
+        drim = get_engine(engine).device
+
+    def sample(lg, key):
+        lg = lg[:, -1, :]
+        if temperature > 0:
+            nxt = jax.random.categorical(key, lg / temperature)
+        else:
+            nxt = jnp.argmax(lg, -1)
+        return nxt[:, None].astype(jnp.int32)
+
+    if drim:
+        def dec(p, tok, caches, pos, key):
+            with serving_engine(engine, n_queues=n_queues):
+                lg, caches = decode_step_eager(p, cfg, tok, caches, pos,
+                                               ctx_len)
+            return sample(lg, key), caches
+        return dec
+
+    @jax.jit
+    def dec(p, tok, caches, pos, key):
+        lg, caches = decode_step(p, cfg, tok, caches, pos, ctx_len)
+        return sample(lg, key), caches
+    return dec
+
+
+def insert_request(caches, pre_caches, slot):
+    """Splice one request's batch-1 prefill caches into `slot` of the
+    batched decode caches, ZEROING the slot's previous contents first
+    (additive cache writes must never see a previous tenant's keys).
+
+    Caches are stacked [L, batch, ...] pytrees (layer axis 0, batch
+    axis 1); any leaf that cannot insert raises a shape-mismatch error
+    naming the cache path.
+    """
+    from jax.tree_util import keystr, tree_map_with_path
+
+    def ins(path, full, one):
+        if (full.ndim != one.ndim or full.ndim < 2 or one.shape[1] != 1
+                or any(o > f for o, f in zip(one.shape, full.shape))):
+            raise ValueError(
+                f"cache insert mismatch at {keystr(path)}: prefill leaf "
+                f"{one.shape} cannot insert into {full.shape} (expected "
+                "stacked [L, batch, ...] caches, batch axis 1, and a "
+                "batch-1 prefill)")
+        blank = jnp.zeros((full.shape[0], 1) + full.shape[2:], full.dtype)
+        blank = jax.lax.dynamic_update_slice(
+            blank, one.astype(full.dtype), (0,) * full.ndim)
+        at = (jnp.int32(0), jnp.asarray(slot, jnp.int32)) \
+            + (jnp.int32(0),) * (full.ndim - 2)
+        return jax.lax.dynamic_update_slice(full, blank, at)
+
+    return tree_map_with_path(ins, caches, pre_caches)
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode request: prompt tokens plus generation budget."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_wave: int
+
+
+class WaveBatcher:
+    """Fixed slot pool + shared decode waves + per-request accounting.
+
+    `submit()` enqueues a request (arrival_wave defaults to "now");
+    `run_wave()` admits eligible pending requests into free slots
+    (prefill + zeroed-slot insert), then runs ONE decode step over all
+    active slots; `run()` loops until every request finished.  The
+    `wave_log` records admissions, decoded request ids, per-request
+    positions and occupancy per wave — the invariants tests assert.
+    """
+
+    def __init__(self, cfg, params, *, n_slots: int, ctx_len: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 engine: Optional[str] = None,
+                 n_queues: Optional[int] = None) -> None:
+        if cfg.family not in ("dense", "vlm", "moe", "ssm"):
+            raise NotImplementedError(
+                "continuous batching needs stacked [L, batch, ...] "
+                f"caches; family {cfg.family!r} nests differently")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.ctx_len = ctx_len
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = make_decode_fn(cfg, ctx_len, temperature, engine,
+                                      n_queues)
+        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+        self.caches = empty_caches(cfg, n_slots, ctx_len)
+        self.wave = 0
+        self.wave_log: List[Dict[str, Any]] = []
+        self.results: Dict[int, List[int]] = {}
+        self._pending: Deque[Request] = collections.deque()
+        self._next_rid = 0
+        # per-slot state; rid -1 marks a free slot
+        self._slot_rid = [-1] * n_slots
+        self._slot_pos = np.zeros(n_slots, np.int64)
+        self._slot_last = np.zeros(n_slots, np.int32)
+        self._slot_remaining = [0] * n_slots
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_wave: Optional[int] = None) -> int:
+        """Enqueue a request; returns its rid.  It joins the first wave
+        >= arrival_wave (default: the next wave to run) with a free
+        slot — never a private decode stream."""
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + max_new_tokens - 1 > self.ctx_len:
+            raise ValueError(
+                f"request needs {len(prompt) + max_new_tokens - 1} cache "
+                f"positions, ctx_len is {self.ctx_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens),
+            arrival_wave=self.wave if arrival_wave is None
+            else int(arrival_wave)))
+        self.results[rid] = []
+        return rid
+
+    @property
+    def done(self) -> bool:
+        return not self._pending and all(r < 0 for r in self._slot_rid)
+
+    # -- wave loop ---------------------------------------------------------
+    def _sample_first(self, logits) -> int:
+        lg = logits[:, -1, :]
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            tok = jax.random.categorical(sub, lg / self.temperature)[0]
+        else:
+            tok = jnp.argmax(lg, -1)[0]
+        return int(tok)
+
+    def _admit(self, req: Request, slot: int) -> None:
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, pre = self._prefill(self.params, {"tokens": toks})
+        self.caches = insert_request(self.caches, pre, slot)
+        first = self._sample_first(logits)
+        self.results[req.rid].append(first)
+        if req.max_new_tokens == 1:
+            return                       # done at admission, slot stays free
+        self._slot_rid[slot] = req.rid
+        self._slot_pos[slot] = len(req.prompt)
+        self._slot_last[slot] = first
+        self._slot_remaining[slot] = req.max_new_tokens - 1
+
+    def _admit_pending(self) -> List[int]:
+        admitted: List[int] = []
+        still: Deque[Request] = collections.deque()
+        while self._pending:
+            req = self._pending.popleft()
+            free = next((s for s in range(self.n_slots)
+                         if self._slot_rid[s] < 0), None)
+            if req.arrival_wave > self.wave or free is None:
+                still.append(req)
+                continue
+            self._admit(req, free)
+            admitted.append(req.rid)
+        self._pending = still
+        return admitted
+
+    def run_wave(self) -> Dict[str, Any]:
+        """Admit eligible arrivals, then one shared decode step over all
+        active slots; returns (and logs) the wave record."""
+        admitted = self._admit_pending()
+        active = [s for s in range(self.n_slots)
+                  if self._slot_rid[s] >= 0]
+        record = {
+            "wave": self.wave,
+            "admitted": admitted,
+            "decoded": [self._slot_rid[s] for s in active],
+            "positions": {self._slot_rid[s]: int(self._slot_pos[s])
+                          for s in active},
+            "n_active": len(active),
+        }
+        if active:
+            tok = jnp.asarray(self._slot_last, jnp.int32)[:, None]
+            pos = jnp.asarray(self._slot_pos, jnp.int32)
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.caches = self._decode(self.params, tok, self.caches,
+                                            pos, sub)
+            nxt = np.asarray(nxt).reshape(-1)
+            for s in active:
+                rid = self._slot_rid[s]
+                self.results[rid].append(int(nxt[s]))
+                self._slot_last[s] = nxt[s]
+                self._slot_pos[s] += 1
+                self._slot_remaining[s] -= 1
+                if self._slot_remaining[s] == 0:
+                    self._slot_rid[s] = -1          # freed for next wave
+        self.wave += 1
+        self.wave_log.append(record)
+        return record
+
+    def run(self, max_waves: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drive waves until every submitted request completed; returns
+        {rid: generated token ids} (first token from prefill logits)."""
+        while not self.done:
+            if self.wave >= max_waves:
+                raise RuntimeError(
+                    f"batcher did not drain in {max_waves} waves")
+            self.run_wave()
+        return {rid: np.asarray(toks, np.int32)
+                for rid, toks in self.results.items()}

@@ -3,30 +3,56 @@
 Serving path features:
   * static-shape KV caches sized to --ctx (sequence-sharded over `model`)
   * greedy or temperature sampling
+  * --engine {tpu,resident,baseline,queued,pallas}: how BitLinear
+    decode matmuls execute — "tpu" is the native XLA path (the
+    EngineRegistry roofline comparator's contender); any DRIM device
+    engine routes each decode GEMM through the drim.jit carry-save
+    pipeline on the simulated fleet (traced once per layer shape,
+    lowered once per engine signature), decoding eagerly per layer
   * --packed: BitLinear weights bit-packed in HBM (32x smaller weight
-    reads; kernels/xnor_popcount on TPU)
+    reads; kernels/xnor_popcount on TPU, host unpack on DRIM engines),
+    with a bit-exactness assert vs the dense STE path at temperature 0
+  * --microbench: the prefill / insert / generate split (the maxtext
+    experimental_decode_microbenchmark pattern) with compile time
+    reported separately per stage
+  * --continuous N: N staggered requests through the continuous-
+    batching wave scheduler (launch.batching.WaveBatcher)
+
+Timing: the first decode step runs UNTIMED as warm-up and is reported
+as `compile_s`, so `decode_tok_per_s` and the p50/p99 step latencies
+are steady-state.
 
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch drim-bnn \
-      --smoke-config --batch 4 --prompt-len 32 --gen 16
+      --smoke-config --batch 4 --prompt-len 32 --gen 16 --engine resident
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.launch.batching import WaveBatcher, make_decode_fn
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import (decode_step, empty_caches, init_params, prefill)
+from repro.models.layers import pack_bitlinear
+
+# config-geometry override flags -> ModelConfig fields (0 = keep)
+_CFG_OVERRIDES = (("layers", "n_layers"), ("d_model", "d_model"),
+                  ("d_ff", "d_ff"), ("heads", "n_heads"),
+                  ("kv_heads", "n_kv_heads"), ("d_head", "d_head"),
+                  ("vocab", "vocab_size"))
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def parse_args(argv=None) -> argparse.Namespace:
+    from repro.pim.compiler import engines
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="drim-bnn")
     ap.add_argument("--smoke-config", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -38,74 +64,334 @@ def main(argv=None):
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    ap.add_argument("--engine", default="tpu", choices=sorted(engines()),
+                    help="BitLinear decode matmul backend: 'tpu' = "
+                    "native XLA; DRIM engines route decode GEMMs "
+                    "through the drim.jit compile->lower->run pipeline")
+    ap.add_argument("--n-queues", type=int, default=None,
+                    help="queue count for --engine queued")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve from bit-packed BitLinear weights "
+                    "(pack_bitlinear offline conversion)")
+    ap.add_argument("--microbench", action="store_true",
+                    help="prefill/insert/generate microbenchmark split")
+    ap.add_argument("--continuous", type=int, default=0, metavar="N",
+                    help="run N requests through the continuous-"
+                    "batching wave scheduler instead of one static "
+                    "batch")
+    ap.add_argument("--arrive-every", type=int, default=1,
+                    help="waves between request arrivals in "
+                    "--continuous mode (0 = all arrive at wave 0)")
+    for flag, _field in _CFG_OVERRIDES:
+        ap.add_argument(f"--{flag.replace('_', '-')}", type=int,
+                        default=0, help=argparse.SUPPRESS)
+    return ap.parse_args(argv)
 
+
+def build_cfg(args):
     cfg = (get_smoke_config(args.arch) if args.smoke_config
            else get_config(args.arch))
-    cfg = cfg.replace(remat=False, param_dtype="bfloat16")
+    over = {field: getattr(args, flag) for flag, field in _CFG_OVERRIDES
+            if getattr(args, flag)}
+    if over:
+        cfg = cfg.replace(**over)
+    return cfg.replace(remat=False, param_dtype="bfloat16")
+
+
+def splice_caches(caches, pre_caches):
+    """Right-size prefill caches into the ctx-length decode caches.
+
+    Every leaf must either match exactly or fit inside the decode cache
+    at the same rank.  Anything else used to silently KEEP THE EMPTY
+    cache (serving garbage attention state); now it raises, naming the
+    offending cache path.
+    """
+    from jax.tree_util import keystr, tree_map_with_path
+
+    def splice(path, full, pre):
+        if full.shape == pre.shape:
+            return pre.astype(full.dtype)
+        if full.ndim == pre.ndim and all(
+                p <= f for p, f in zip(pre.shape, full.shape)):
+            return jax.lax.dynamic_update_slice(
+                full, pre.astype(full.dtype), (0,) * full.ndim)
+        raise ValueError(
+            f"cache splice mismatch at {keystr(path)}: prefill leaf "
+            f"{pre.shape} cannot splice into decode cache {full.shape}")
+
+    return tree_map_with_path(splice, caches, pre_caches)
+
+
+def pack_model_params(params):
+    """Offline --packed conversion: every BitLinear param dict (marker:
+    'bkernel') in the pytree becomes its bit-packed serving form; works
+    on scan-stacked [L, d_in, d_out] leaves."""
+    def walk(p):
+        if isinstance(p, dict):
+            if "bkernel" in p:
+                return pack_bitlinear(p)
+            return {k: walk(v) for k, v in p.items()}
+        return p
+    return walk(params)
+
+
+def _assert_packed_bit_exact(cfg, dense_params, packed_params, tok,
+                             caches, pos, ctx_len) -> None:
+    """--packed at temperature 0 must reproduce the dense STE path
+    bitwise: the packed XNOR-popcount dot and the bf16 STE matmul both
+    produce the same exact integer, so logits — and served tokens —
+    must match."""
+    step = jax.jit(lambda p, t, c, q: decode_step(p, cfg, t, c, q,
+                                                  ctx_len)[0])
+    lg_dense = np.asarray(step(dense_params, tok, caches, pos),
+                          np.float32)
+    lg_packed = np.asarray(step(packed_params, tok, caches, pos),
+                           np.float32)
+    ids_dense = lg_dense[:, -1, :].argmax(-1)
+    ids_packed = lg_packed[:, -1, :].argmax(-1)
+    if not np.array_equal(ids_dense, ids_packed):
+        raise RuntimeError(
+            "--packed decode diverged from the dense STE path at "
+            f"temperature 0: token ids {ids_packed.tolist()} vs "
+            f"{ids_dense.tolist()}")
+    np.testing.assert_allclose(lg_packed, lg_dense, rtol=1e-5, atol=1e-5,
+                               err_msg="--packed logits drifted from "
+                               "the dense STE path")
+
+
+def _percentiles_ms(step_times: List[float]) -> Tuple[float, float]:
+    if not step_times:
+        return 0.0, 0.0
+    arr = np.asarray(step_times) * 1e3
+    return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+
+def _setup(args, cfg, mesh):
+    """Params + prompt batch + jitted prefill + spliced ctx caches."""
+    ctx_len = args.ctx or (args.prompt_len + args.gen)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(jax.random.fold_in(key, 1),
+                              (args.batch, args.prompt_len), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros(
+            (args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+
+    dense_params = params
+    if args.packed:
+        params = pack_model_params(params)
+
+    t0 = time.time()
+    logits, pre_caches = jax.jit(
+        lambda p, b: prefill(p, cfg, b))(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    caches = splice_caches(empty_caches(cfg, args.batch, ctx_len),
+                           pre_caches)
+    return dict(ctx_len=ctx_len, key=key, params=params,
+                dense_params=dense_params, batch=batch, logits=logits,
+                caches=caches, prefill_s=t_prefill)
+
+
+def run_serve(args) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """The static-batch serving loop; returns (generated ids [B, gen],
+    stats dict)."""
+    cfg = build_cfg(args)
     mesh = (make_host_mesh() if args.mesh == "host"
             else make_production_mesh(multi_pod=(args.mesh == "multi")))
-    ctx = args.ctx or (args.prompt_len + args.gen)
-
     with mesh:
+        st = _setup(args, cfg, mesh)
+        ctx_len, key, params, caches = (st["ctx_len"], st["key"],
+                                        st["params"], st["caches"])
+        dec = make_decode_fn(cfg, ctx_len, args.temperature, args.engine,
+                             args.n_queues)
+
+        tok = jnp.argmax(st["logits"][:, -1, :], -1)[:, None] \
+            .astype(jnp.int32)
+        pos0 = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+
+        if args.packed and args.temperature == 0:
+            _assert_packed_bit_exact(cfg, st["dense_params"], params,
+                                     tok, caches, pos0, ctx_len)
+
+        # Untimed warm-up on the first step's exact shapes: jit compile
+        # (or DRIM kernel trace + lowering) lands here, not in tok/s.
+        t0 = time.time()
+        wu_tok, _ = dec(params, tok, caches, pos0,
+                        jax.random.fold_in(key, 100))
+        jax.block_until_ready(wu_tok)
+        compile_s = time.time() - t0
+
+        out = [np.asarray(tok)]
+        step_times: List[float] = []
+        for i in range(args.gen - 1):
+            pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
+            t1 = time.time()
+            tok, caches = dec(params, tok, caches, pos,
+                              jax.random.fold_in(key, 100 + i))
+            jax.block_until_ready(tok)
+            step_times.append(time.time() - t1)
+            out.append(np.asarray(tok))
+
+        gen = np.concatenate(out, 1)
+        p50, p99 = _percentiles_ms(step_times)
+        tok_per_s = (args.batch * (args.gen - 1)
+                     / max(sum(step_times), 1e-9))
+        stats = {
+            "arch": cfg.arch, "engine": args.engine,
+            "packed": bool(args.packed), "batch": args.batch,
+            "gen": args.gen, "prefill_s": round(st["prefill_s"], 3),
+            "compile_s": round(compile_s, 3),
+            "decode_tok_per_s": round(tok_per_s, 1),
+            "decode_p50_ms": round(p50, 3),
+            "decode_p99_ms": round(p99, 3),
+            "sample_ids": gen[0, :8].tolist(),
+        }
+        return gen, stats
+
+
+def run_microbench(args) -> Tuple[None, Dict[str, Any]]:
+    """The maxtext-style decode microbenchmark split: prefill / insert /
+    generate timed separately, each with compile time reported apart
+    from steady-state (the same warm-up discipline as run_serve)."""
+    cfg = build_cfg(args)
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=(args.mesh == "multi")))
+    iters = 3
+    with mesh:
+        ctx_len = args.ctx or (args.prompt_len + args.gen)
         key = jax.random.PRNGKey(args.seed)
         params = init_params(key, cfg)
+        if args.packed:
+            params = pack_model_params(params)
         toks = jax.random.randint(jax.random.fold_in(key, 1),
                                   (args.batch, args.prompt_len), 0,
                                   cfg.vocab_size)
         batch = {"tokens": toks}
-        if cfg.family == "vlm":
-            batch["patch_embeds"] = jnp.zeros(
-                (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
-        if cfg.family == "audio":
-            batch["frames"] = jnp.zeros(
-                (args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
 
+        # prefill: full-sequence forward building batch caches
+        pf = jax.jit(lambda p, b: prefill(p, cfg, b))
         t0 = time.time()
-        logits, pre_caches = jax.jit(
-            lambda p, b: prefill(p, cfg, b))(params, batch)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
+        logits, pre_caches = pf(params, batch)
+        jax.block_until_ready(logits)
+        pf_compile = time.time() - t0
+        times = []
+        for _ in range(iters):
+            t0 = time.time()
+            lg, pre_caches = pf(params, batch)
+            jax.block_until_ready(lg)
+            times.append(time.time() - t0)
+        prefill_stats = {"compile_s": round(pf_compile, 3),
+                         "avg_s": round(float(np.mean(times)), 4)}
 
-        # right-size caches to ctx and splice the prefix in
-        caches = empty_caches(cfg, args.batch, ctx)
-        caches = jax.tree.map(
-            lambda full, pre: (jax.lax.dynamic_update_slice(
-                full, pre.astype(full.dtype), (0,) * full.ndim)
-                if full.ndim == pre.ndim and full.shape != pre.shape
-                else pre.astype(full.dtype)
-                if full.shape == pre.shape else full),
-            caches, pre_caches)
+        # insert: splice prefill caches into the ctx-length decode caches
+        empty = empty_caches(cfg, args.batch, ctx_len)
+        ins = jax.jit(splice_caches)
+        t0 = time.time()
+        caches = ins(empty, pre_caches)
+        jax.block_until_ready(caches)
+        ins_compile = time.time() - t0
+        times = []
+        for _ in range(iters):
+            t0 = time.time()
+            caches = ins(empty, pre_caches)
+            jax.block_until_ready(caches)
+            times.append(time.time() - t0)
+        insert_stats = {"compile_s": round(ins_compile, 3),
+                        "avg_s": round(float(np.mean(times)), 4)}
 
-        @jax.jit
-        def dec(p, tok, c, pos, k):
-            lg, c = decode_step(p, cfg, tok, c, pos, ctx)
-            lg = lg[:, -1, :]
-            if args.temperature > 0:
-                nxt = jax.random.categorical(k, lg / args.temperature)
-            else:
-                nxt = jnp.argmax(lg, -1)
-            return nxt[:, None].astype(jnp.int32), c
-
+        # generate: steady-state decode steps after one untimed warm-up
+        dec = make_decode_fn(cfg, ctx_len, args.temperature, args.engine,
+                             args.n_queues)
         tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
-        out = [np.asarray(tok)]
-        t1 = time.time()
-        for i in range(args.gen - 1):
+        pos0 = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+        t0 = time.time()
+        wu_tok, _ = dec(params, tok, caches, pos0,
+                        jax.random.fold_in(key, 100))
+        jax.block_until_ready(wu_tok)
+        gen_compile = time.time() - t0
+        step_times = []
+        for i in range(max(args.gen - 1, 1)):
             pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
+            t1 = time.time()
             tok, caches = dec(params, tok, caches, pos,
                               jax.random.fold_in(key, 100 + i))
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t1
+            jax.block_until_ready(tok)
+            step_times.append(time.time() - t1)
+        p50, p99 = _percentiles_ms(step_times)
+        generate_stats = {
+            "compile_s": round(gen_compile, 3),
+            "tok_per_s": round(args.batch * len(step_times)
+                               / max(sum(step_times), 1e-9), 1),
+            "p50_ms": round(p50, 3), "p99_ms": round(p99, 3)}
 
-        gen = np.concatenate(out, 1)
-        toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-        print(json.dumps({
-            "arch": cfg.arch, "batch": args.batch,
-            "prefill_s": round(t_prefill, 3),
-            "decode_tok_per_s": round(toks_per_s, 1),
-            "sample_ids": gen[0, :8].tolist()}))
-        return gen
+        stats = {"arch": cfg.arch, "engine": args.engine,
+                 "packed": bool(args.packed), "batch": args.batch,
+                 "microbench": {"prefill": prefill_stats,
+                                "insert": insert_stats,
+                                "generate": generate_stats}}
+        return None, stats
+
+
+def run_continuous(args) -> Tuple[Dict[int, np.ndarray], Dict[str, Any]]:
+    """N staggered requests through the wave batcher; arrivals join the
+    next shared wave, positions and slots tracked per request."""
+    cfg = build_cfg(args)
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=(args.mesh == "multi")))
+    with mesh:
+        ctx_len = args.ctx or (args.prompt_len + args.gen)
+        key = jax.random.PRNGKey(args.seed)
+        params = init_params(key, cfg)
+        if args.packed:
+            params = pack_model_params(params)
+        batcher = WaveBatcher(cfg, params, n_slots=args.batch,
+                              ctx_len=ctx_len,
+                              temperature=args.temperature,
+                              seed=args.seed, engine=args.engine,
+                              n_queues=args.n_queues)
+        prompts = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 1),
+            (args.continuous, args.prompt_len), 0, cfg.vocab_size))
+        for r in range(args.continuous):
+            batcher.submit(prompts[r], args.gen,
+                           arrival_wave=r * args.arrive_every)
+        t0 = time.time()
+        results = batcher.run()
+        wall = time.time() - t0
+        total_toks = sum(len(v) for v in results.values())
+        occupancy = (float(np.mean([w["n_active"]
+                                    for w in batcher.wave_log]))
+                     if batcher.wave_log else 0.0)
+        stats = {
+            "arch": cfg.arch, "engine": args.engine,
+            "packed": bool(args.packed), "n_requests": args.continuous,
+            "n_slots": args.batch, "n_waves": batcher.wave,
+            "total_tokens": total_toks,
+            "tok_per_s": round(total_toks / max(wall, 1e-9), 1),
+            "mean_active_slots": round(occupancy, 2),
+            "request_tokens": {int(r): v.tolist()[:8]
+                               for r, v in results.items()},
+        }
+        return results, stats
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.microbench:
+        gen, stats = run_microbench(args)
+    elif args.continuous:
+        gen, stats = run_continuous(args)
+    else:
+        gen, stats = run_serve(args)
+    print(json.dumps(stats))
+    return gen
 
 
 if __name__ == "__main__":

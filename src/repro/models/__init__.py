@@ -1,3 +1,3 @@
 """Model zoo: one trunk, pluggable mixers, all assigned architectures."""
 from .transformer import (init_params, train_loss, prefill, decode_step,
-                          empty_caches)
+                          decode_step_eager, empty_caches)

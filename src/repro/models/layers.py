@@ -13,15 +13,77 @@ to HBM).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
 Params = Dict[str, Any]
+
+
+# --- DRIM serving engine routing --------------------------------------------
+
+# Ambient serving state installed by `serving_engine(...)`.  None engine
+# means the native XLA path (the EngineRegistry "tpu" comparator's
+# contender); a device engine name routes every BitLinear matmul below
+# through the drim.jit carry-save pipeline on the simulated fleet.
+_SERVING: Dict[str, Any] = {"engine": None, "n_queues": None, "geom": None}
+
+
+@contextlib.contextmanager
+def serving_engine(engine: Optional[str] = None, *,
+                   n_queues: Optional[int] = None, geom=None):
+    """Route BitLinear matmuls through the DRIM pipeline for the scope.
+
+    `engine` is any `pim.compiler.ENGINE_REGISTRY` name: None or "tpu"
+    keeps today's native path; "resident" / "queued" / "pallas" /
+    "baseline" make `bitlinear` / `bitlinear_packed` execute their sign
+    GEMM on the simulated fleet via `pim.bnn.serve_bnn_matmul` —
+    traced once per reduction width, lowered once per engine signature
+    (`compiler.lower_cached`).  DRIM engines execute host-side, so the
+    decode step must run eagerly (`models.decode_step_eager`); tracing
+    a BitLinear under an active DRIM engine raises RuntimeError.
+    """
+    if engine is not None:
+        from repro.pim.compiler import get_engine
+        eng = get_engine(engine)          # fail fast on unknown names
+        if not eng.device:
+            engine = None                 # "tpu" == the native path
+    prev = dict(_SERVING)
+    _SERVING.update(engine=engine, n_queues=n_queues, geom=geom)
+    try:
+        yield
+    finally:
+        _SERVING.update(prev)
+
+
+def serving_engine_name() -> Optional[str]:
+    """The active DRIM serving engine, or None for the native path."""
+    return _SERVING["engine"]
+
+
+def _drim_gemm(x: jax.Array, wb_bits: np.ndarray) -> jax.Array:
+    """x [..., K] activations vs wb_bits [N, K] weight sign bits, as a
+    ±1 dot on the DRIM fleet; returns [..., N] int32 (exact)."""
+    from repro.pim.bnn import serve_bnn_matmul
+    if isinstance(x, jax.core.Tracer):
+        raise RuntimeError(
+            f"BitLinear is routed through DRIM serving engine "
+            f"{_SERVING['engine']!r}, which executes host-side — the "
+            "decode step must run eagerly (models.decode_step_eager / "
+            "launch.serve --engine), not under jit/scan/vmap")
+    lead = x.shape[:-1]
+    xb = np.asarray(kops.sign_bits(x.astype(jnp.float32))) \
+        .reshape(-1, x.shape[-1])
+    dot = serve_bnn_matmul(xb, wb_bits, engine=_SERVING["engine"],
+                           geom=_SERVING["geom"],
+                           n_queues=_SERVING["n_queues"])
+    return jnp.asarray(dot, jnp.int32).reshape(*lead, wb_bits.shape[0])
 
 
 def ambient_mesh():
@@ -130,29 +192,64 @@ def bitlinear(params: Params, x: jax.Array) -> jax.Array:
     """
     w = params["bkernel"]
     alpha = jnp.mean(jnp.abs(w), axis=0).astype(x.dtype)  # [d_out]
-    wb = _ste_sign(w).astype(x.dtype)
-    xb = _ste_sign(x.astype(jnp.float32)).astype(x.dtype)
-    y = (xb @ wb) * alpha
+    if _SERVING["engine"] is not None:
+        if isinstance(w, jax.core.Tracer):
+            raise RuntimeError(
+                "BitLinear weights are traced under an active DRIM "
+                "serving engine — run the decode step eagerly "
+                "(models.decode_step_eager)")
+        wb_bits = np.asarray(kops.sign_bits(w)).T       # [d_out, d_in]
+        # Exact int dot -> x.dtype: identical rounding to the bf16 STE
+        # matmul below (the dot is an exact small integer either way),
+        # so engine choice never changes served tokens at temp 0.
+        y = _drim_gemm(x, wb_bits).astype(x.dtype) * alpha
+    else:
+        wb = _ste_sign(w).astype(x.dtype)
+        xb = _ste_sign(x.astype(jnp.float32)).astype(x.dtype)
+        y = (xb @ wb) * alpha
     if "bias" in params:
         y = y + params["bias"].astype(x.dtype)
     return y
 
 
 def pack_bitlinear(params: Params) -> Params:
-    """Offline conversion: dense shadow weights -> packed serving weights."""
-    w = params["bkernel"]  # [d_in, d_out]
+    """Offline conversion: dense shadow weights -> packed serving weights.
+
+    Works on a single layer ([d_in, d_out]) or scan-stacked leaves
+    ([L, d_in, d_out] — what `launch.serve --packed` converts): the
+    reduction dim is always axis -2, packed little-endian into uint32
+    words along the last axis.
+    """
+    w = params["bkernel"]                            # [..., d_in, d_out]
+    wt = jnp.swapaxes(w, -1, -2)                     # [..., d_out, d_in]
     return {
-        "w_packed": kops.pack_signs(w.T),            # [d_out, ceil(d_in/32)]
-        "alpha": jnp.mean(jnp.abs(w), axis=0),       # [d_out]
-        "k_bits": jnp.asarray(w.shape[0], jnp.int32),
+        "w_packed": kops.pack_signs(wt),             # [..., d_out, ceil(d_in/32)]
+        "alpha": jnp.mean(jnp.abs(w), axis=-2),      # [..., d_out]
+        "k_bits": jnp.full(w.shape[:-2], w.shape[-2], jnp.int32),
         **({"bias": params["bias"]} if "bias" in params else {}),
     }
 
 
 def bitlinear_packed(packed: Params, x: jax.Array, k_bits: int) -> jax.Array:
     """Serving path: activations sign-packed on the fly, weights stay
-    bit-packed in HBM (32x smaller reads — decode is weight-BW bound)."""
-    y = kops.binary_matmul(x, packed["w_packed"], k_bits, dtype=x.dtype)
+    bit-packed in HBM (32x smaller reads — decode is weight-BW bound).
+
+    Under an active DRIM `serving_engine`, the packed words are
+    unpacked host-side to sign bits and the GEMM runs on the simulated
+    fleet instead of the XNOR-popcount TPU kernel.
+    """
+    if _SERVING["engine"] is not None:
+        wp = packed["w_packed"]
+        if isinstance(wp, jax.core.Tracer):
+            raise RuntimeError(
+                "packed BitLinear weights are traced under an active "
+                "DRIM serving engine — run the decode step eagerly "
+                "(models.decode_step_eager)")
+        wb_bits = kops.unpack_sign_bits_np(wp, k_bits)   # [d_out, K]
+        y = _drim_gemm(x, wb_bits).astype(x.dtype)
+    else:
+        y = kops.binary_matmul(x, packed["w_packed"], k_bits,
+                               dtype=x.dtype)
     y = y * packed["alpha"].astype(x.dtype)
     if "bias" in packed:
         y = y + packed["bias"].astype(x.dtype)
@@ -168,6 +265,11 @@ def linear_init(key, d_in, d_out, *, bias=False, dtype=jnp.float32,
 def linear(params: Params, x: jax.Array) -> jax.Array:
     if "bkernel" in params:
         return bitlinear(params, x)
+    if "w_packed" in params:
+        # k_bits must be static for the packed kernel; the activation's
+        # feature dim is the reduction width by construction (the
+        # "k_bits" leaf is traced under jit and only kept for audit).
+        return bitlinear_packed(params, x, x.shape[-1])
     return dense(params, x)
 
 

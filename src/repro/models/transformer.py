@@ -297,6 +297,39 @@ def decode_step(params, cfg, tokens, caches, pos, ctx_len: int
     return _logits(params, cfg, x), new_caches
 
 
+def _tree_slice(tree, i: int):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def decode_step_eager(params, cfg, tokens, caches, pos, ctx_len: int
+                      ) -> Tuple[jax.Array, Any]:
+    """`decode_step` with a Python loop over layers instead of lax.scan.
+
+    Same math layer by layer (bitwise-identical logits and caches), but
+    nothing is traced: this is the decode path for DRIM serving engines
+    (`layers.serving_engine`), whose BitLinear GEMMs execute host-side
+    on the simulated fleet and therefore cannot run under jit/scan.
+    Families with stacked [L, ...] layer params only (dense/vlm/moe/
+    ssm); audio and hybrid decode have no DRIM-served BitLinear path.
+    """
+    if cfg.family not in ("dense", "vlm", "moe", "ssm"):
+        raise NotImplementedError(
+            f"decode_step_eager supports stacked-layer families, not "
+            f"{cfg.family!r}")
+    window = _window_for(cfg, ctx_len)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        cfg.activation_dtype)
+    _, _, decode_fn = _block_fns(cfg)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        layer_p = _tree_slice(params["layers"], i)
+        layer_c = _tree_slice(caches, i)
+        x, nc = decode_fn(layer_p, cfg, x, layer_c, pos, window=window)
+        new_caches.append(nc)
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *new_caches)
+    return _logits(params, cfg, x), stacked
+
+
 def _hybrid_decode(params, cfg, x, caches, pos, window):
     groups, per, tail = _hybrid_layout(cfg)
 

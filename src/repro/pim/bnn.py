@@ -34,6 +34,7 @@ on the simulator and returns the int32 dot products, bit-exact vs
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Dict, List, Optional, Tuple
 
@@ -43,6 +44,14 @@ import numpy as np
 from repro.core import DRIM_R, DrimGeometry
 from repro.core.subarray import WORD_BITS
 from repro.pim.graph import BulkGraph, FusedSchedule
+
+# Serving reduction tile: the carry-save graph keeps ~2K+1 data rows
+# simultaneously live at the XNOR level, so K beyond the ~500-row
+# sub-array budget cannot lower (K=256 needs 513 live rows).  The
+# serving path tiles the reduction dim into <=128-column chunks — chunk
+# dots sum exactly (dot is linear in K) — and each distinct chunk width
+# is one cached kernel for the whole process.
+DEFAULT_K_TILE = 128
 
 
 def counter_bits(k_bits: int) -> int:
@@ -221,3 +230,119 @@ def bnn_dot_partitioned(a_bits: np.ndarray, b_bits: np.ndarray, *,
     outs = low.run(feeds, n_bits=lanes)
     count = decode_counts(outs, nbits, lanes)
     return (2 * count - k_bits).reshape(m, n), low.schedule
+
+
+# ---------------------------------------------------------------------------
+# The serving path: BitLinear decode GEMMs routed through drim.jit
+# ---------------------------------------------------------------------------
+
+def k_chunks(k_bits: int, k_tile: Optional[int] = None) -> Tuple[int, ...]:
+    """Split a reduction width into row-budget-sized kernel chunks."""
+    tile = k_tile or DEFAULT_K_TILE
+    if k_bits < 1:
+        raise ValueError("k_bits must be positive")
+    if tile < 1:
+        raise ValueError("k_tile must be positive")
+    chunks = [tile] * (k_bits // tile)
+    if k_bits % tile:
+        chunks.append(k_bits % tile)
+    return tuple(chunks)
+
+
+@functools.lru_cache(maxsize=None)
+def bitlinear_kernel(k_bits: int):
+    """The serving kernel for one reduction width, traced ONCE.
+
+    A `drim.jit` function over 2K bit-planes (a0..a{K-1}, b0..b{K-1})
+    returning the carry-save popcount of the XNOR planes — node for
+    node the dataflow of `bnn_dot_graph_carrysave`, but arriving
+    through the same front door a user program would.  lru-cached so a
+    decode loop traces each (layer-shape) K exactly once per process.
+    """
+    from repro.pim import frontend
+
+    def body(*planes):
+        xn = [frontend.xnor(a, b)
+              for a, b in zip(planes[:k_bits], planes[k_bits:])]
+        return frontend.popcount(xn)
+
+    names = [f"a{i}" for i in range(k_bits)] \
+        + [f"b{i}" for i in range(k_bits)]
+    return frontend.jit(body, arg_names=names,
+                        name=f"bitlinear_dot[K={k_bits}]")
+
+
+def serving_lowering(k_bits: int, *, engine: str = "resident",
+                     geom: Optional[DrimGeometry] = None, mesh=None,
+                     n_queues: Optional[int] = None):
+    """compile→lower the serving kernel once per (K, engine, geometry,
+    mesh, queues) via the process-wide `compiler.lower_cached` memo —
+    shared with `offload.serving_verdict`, so serving execution and
+    pricing read the same `Lowered`."""
+    from repro.pim import compiler
+    return compiler.lower_cached(
+        bitlinear_kernel(k_bits).trace(),
+        key=("bitlinear_dot", k_bits), geom=geom, engine=engine,
+        mesh=mesh, n_queues=n_queues)
+
+
+def _stage_chunk_planes(a_bits: np.ndarray,
+                        b_bits: np.ndarray) -> Tuple[List[np.ndarray], int]:
+    """`stage_bnn_planes` layout as the positional plane list the traced
+    kernel takes: a-planes then b-planes, lane m*N+n = output (m, n)."""
+    m, k_bits = a_bits.shape
+    n = b_bits.shape[0]
+    lanes = m * n
+    n_words = -(-lanes // WORD_BITS)
+    planes: List[np.ndarray] = []
+    for source, layout in ((a_bits, "repeat"), (b_bits, "tile")):
+        for k in range(k_bits):
+            lane_bits = (np.repeat(source[:, k].astype(np.uint8), n)
+                         if layout == "repeat"
+                         else np.tile(source[:, k].astype(np.uint8), m))
+            padded = np.zeros(n_words * WORD_BITS, np.uint8)
+            padded[:lanes] = lane_bits
+            planes.append(np.packbits(padded, bitorder="little")
+                          .view(np.uint32))
+    return planes, lanes
+
+
+def serve_bnn_matmul(a_bits: np.ndarray, b_bits: np.ndarray, *,
+                     engine: str = "resident",
+                     geom: Optional[DrimGeometry] = None, mesh=None,
+                     n_queues: Optional[int] = None,
+                     k_tile: Optional[int] = None) -> np.ndarray:
+    """Serving-path binary GEMM on the DRIM fleet.
+
+    a_bits [M, K], b_bits [N, K] sign bits in {0, 1}; returns C [M, N]
+    int32 = the ±1 dot, bit-exact vs `kernels/ref.py:xnor_gemm_ref`.
+    The reduction dim tiles into `k_chunks` (sub-array row budget);
+    each chunk runs the cached carry-save `drim.jit` kernel and the
+    partial dots sum exactly: sum over chunks of (2*pop_c - K_c)
+    == 2*popcount(XNOR) - K.
+    """
+    a_bits = np.asarray(a_bits, np.uint8)
+    b_bits = np.asarray(b_bits, np.uint8)
+    if a_bits.ndim != 2 or b_bits.ndim != 2:
+        raise ValueError("serve_bnn_matmul takes 2-D sign-bit operands")
+    m, k_bits = a_bits.shape
+    n, kb2 = b_bits.shape
+    if k_bits != kb2:
+        raise ValueError("operand K dimensions differ")
+    lanes = m * n
+    total = np.zeros(lanes, np.int32)
+    offset = 0
+    for kc in k_chunks(k_bits, k_tile):
+        low = serving_lowering(kc, engine=engine, geom=geom, mesh=mesh,
+                               n_queues=n_queues)
+        planes, _ = _stage_chunk_planes(a_bits[:, offset:offset + kc],
+                                        b_bits[:, offset:offset + kc])
+        outs = low.run(*planes, n_bits=lanes)
+        count = np.zeros(lanes, np.int32)
+        for i, plane in enumerate(outs):
+            bits = np.unpackbits(np.asarray(plane).view(np.uint8),
+                                 bitorder="little")
+            count += bits[:lanes].astype(np.int32) << i
+        total += 2 * count - kc
+        offset += kc
+    return total.reshape(m, n)

@@ -622,3 +622,59 @@ def lower(src, *, geom: Optional[DrimGeometry] = None,
     """Convenience: `compile(src).lower(...)` in one call."""
     return compile(src, geom=geom, row_budget=row_budget).lower(
         engine=engine, mesh=mesh, n_queues=n_queues, partition=partition)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide lowering memo: the serving hot path
+# ---------------------------------------------------------------------------
+
+_LOWER_CACHE: Dict[Tuple, Lowered] = {}
+
+# Observable from tests/telemetry: a decode loop must pay trace +
+# compile + lower once per kernel shape, never once per token.
+LOWER_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_lower_cache() -> None:
+    _LOWER_CACHE.clear()
+    LOWER_CACHE_STATS.update(hits=0, misses=0)
+
+
+def lower_cached(src, *, key: Optional[Tuple] = None,
+                 geom: Optional[DrimGeometry] = None,
+                 engine: Optional[str] = None, mesh=None,
+                 n_queues: Optional[int] = None, partition=None,
+                 row_budget: Optional[int] = DEFAULT_ROW_BUDGET) -> Lowered:
+    """`compile(src).lower(...)` memoized for the LIFE OF THE PROCESS.
+
+    This is the serving hot path: `models.layers` routes every BitLinear
+    decode matmul here, so one `Lowered` (and the jitted wave runners
+    underneath it) is shared across every request that hits the same
+    (program, geometry, engine, mesh, queues, partition) signature —
+    and with `offload.serving_verdict`, so pricing and execution read
+    the SAME lowering.
+
+    `src` itself keys the memo when hashable (op names, frozen traced
+    programs); pass an explicit `key` identifying the program for
+    unhashable sources or when the source object is rebuilt per call
+    (object-identity hashes would defeat the cache).
+    """
+    ident: Any = key if key is not None else src
+    try:
+        hash(ident)
+    except TypeError:
+        raise TypeError(
+            "lower_cached needs a hashable src or an explicit key= "
+            "identifying the program") from None
+    full_key = (ident, geom, engine, mesh, n_queues, partition,
+                row_budget)
+    low = _LOWER_CACHE.get(full_key)
+    if low is None:
+        LOWER_CACHE_STATS["misses"] += 1
+        low = compile(src, geom=geom, row_budget=row_budget).lower(
+            engine=engine, mesh=mesh, n_queues=n_queues,
+            partition=partition)
+        _LOWER_CACHE[full_key] = low
+    else:
+        LOWER_CACHE_STATS["hits"] += 1
+    return low

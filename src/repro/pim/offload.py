@@ -486,6 +486,54 @@ def plan_queued(graph: BulkGraph, n_bits: int, *,
         simulated=simulated)
 
 
+def serving_verdict(m: int, n: int, k_bits: int, *,
+                    geom: Optional[DrimGeometry] = None,
+                    engine: str = "resident",
+                    n_queues: Optional[int] = None,
+                    k_tile: Optional[int] = None) -> Verdict:
+    """Price one served BitLinear decode GEMM ([m, K] x [K, n]).
+
+    Uses the SAME cached lowerings `pim.bnn.serve_bnn_matmul` executes
+    (via `compiler.lower_cached`), priced by `build_verdict` at
+    n_bits = m*n lanes per K chunk, with every row field summed across
+    the serialized chunks — which is exactly how the serving path runs
+    them.  The TPU roofline row sums the same way, so the Verdict
+    compares like with like.
+    """
+    from repro.pim.bnn import k_chunks, serving_lowering
+    chunks = k_chunks(k_bits, k_tile)
+    counts: Dict[int, int] = {}
+    for kc in chunks:
+        counts[kc] = counts.get(kc, 0) + 1
+    n_nodes = 0
+    acc: Dict[str, VerdictRow] = {}
+    order = []
+    for kc, count in counts.items():
+        low = serving_lowering(kc, engine=engine, geom=geom,
+                               n_queues=n_queues)
+        v = build_verdict(low, m * n)
+        n_nodes += v.n_nodes * count
+        for r in v.rows:
+            prev = acc.get(r.contender)
+            if prev is None:
+                order.append(r.contender)
+                prev = VerdictRow(contender=r.contender, latency_s=0.0,
+                                  compute_s=0.0, dma_s=0.0, energy_j=0.0,
+                                  aaps=0, ddr_rows_moved=0)
+            acc[r.contender] = VerdictRow(
+                contender=r.contender,
+                latency_s=prev.latency_s + r.latency_s * count,
+                compute_s=prev.compute_s + r.compute_s * count,
+                dma_s=prev.dma_s + r.dma_s * count,
+                energy_j=prev.energy_j + r.energy_j * count,
+                aaps=prev.aaps + r.aaps * count,
+                ddr_rows_moved=prev.ddr_rows_moved
+                + r.ddr_rows_moved * count)
+    return Verdict(workload=f"bitlinear[{m}x{n}x{k_bits}]",
+                   n_bits=m * n, n_nodes=n_nodes,
+                   rows=tuple(acc[c] for c in order))
+
+
 def plan_model_payloads(cfg) -> Dict[str, Verdict]:
     """Price the framework's own bulk-bitwise payloads for an arch
     config (1-bit EF gradient all-reduce planes + BitLinear sign
