@@ -1,0 +1,190 @@
+"""Chaos & hardening figure: faulted DRIM vs TMR/ECC, priced and timed.
+
+Three experiments over the BNN carry-save dot (the paper's target
+workload), recorded to ``BENCH_chaos.json``:
+
+  1. Corruption sweep — every Table-3 process-variation corner (paper
+     rates, `FaultModel.from_corner(source="paper")`) injected into the
+     bare lowering vs the same graph hardened with TMR voting and with
+     parity ECC: corrupted output bits, the ECC detector's mismatch
+     count, and whether the hardened run stayed bit-exact against the
+     numpy oracle.  The acceptance claim rides along as assertions —
+     at the ±15% corner the bare run corrupts, TMR does not.
+
+  2. Redundancy pricing — AAPs and simulated latency of bare vs
+     "ecc" vs "tmr" vs "tmr+ecc" lowerings from the closed-form
+     `cost()`/`verdict()`; fault tolerance is program text here, so the
+     overhead is a number, not a promise.
+
+  3. Queue-kill recovery — a 4-queue MIMD partition with one command
+     queue killed mid-graph: the fence progress-table detects the gap,
+     `elastic_plan` validates the survivor fleet, orphaned segments are
+     requeued, and the ChaosReport's recovery wall-clock plus the
+     degraded-vs-clean run time land in the record.  Results must stay
+     bit-exact — graceful degradation costs latency only.
+
+    PYTHONPATH=src python -m benchmarks.fig_chaos [--seed 0] [--trials 1]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import drim
+from benchmarks import record
+from drim import DrimGeometry, FaultModel
+from repro.core.analog import PAPER_TABLE3
+from repro.pim import graph_ref_results
+from repro.pim.bnn import bnn_dot_graph_carrysave
+
+GEOM = DrimGeometry(chips=2, banks=4, subarrays_per_bank=8, row_bits=64)
+K_BITS = 4
+N_WORDS = 32
+SCHEMES = (None, "ecc", "tmr", "tmr+ecc")
+
+
+def _geometry():
+    return {"chips": GEOM.chips, "banks": GEOM.banks,
+            "subarrays_per_bank": GEOM.subarrays_per_bank,
+            "row_bits": GEOM.row_bits}
+
+
+def _case(seed: int):
+    graph, _ = bnn_dot_graph_carrysave(K_BITS)
+    rng = np.random.default_rng(seed + 1)
+    feeds = {n: (np.zeros(N_WORDS, np.uint32) if n == "zero"
+                 else rng.integers(0, 1 << 32, N_WORDS, dtype=np.uint32))
+             for n in graph.input_names}
+    return graph, feeds, graph_ref_results(graph, feeds)
+
+
+def _corrupted_bits(outs, ref):
+    total = 0
+    for name in ref:
+        diff = (np.asarray(outs[name], np.uint32)
+                ^ np.asarray(ref[name], np.uint32))
+        total += int(np.unpackbits(diff.view(np.uint8)).sum())
+    return total
+
+
+def _corruption_sweep(csv_rows, graph, feeds, ref, seed: int):
+    total_bits = len(ref) * N_WORDS * 32
+    lows = {s: drim.compile(graph, geom=GEOM).lower("resident", harden=s)
+            for s in (None, "tmr", "ecc")}
+    print(f"\n-- corruption per Table-3 corner (seed {seed}, "
+          f"{total_bits} output bits) --")
+    print(f"{'corner':<8}{'bare bits':>10}{'tmr bits':>10}"
+          f"{'ecc detect':>12}")
+    at_15 = {}
+    for var in sorted(PAPER_TABLE3):
+        fm = FaultModel.from_corner(var, source="paper", seed=seed)
+        bad = {s: _corrupted_bits(low.run(feeds, faults=fm), ref)
+               for s, low in lows.items()}
+        detect = lows["ecc"].last_ecc.mismatch_bits
+        print(f"±{var * 100:>4.0f}%  {bad[None]:>10}{bad['tmr']:>10}"
+              f"{detect:>12}")
+        record.add("chaos", experiment="corruption", corner=var,
+                   seed=seed, geometry=_geometry(),
+                   op=f"bnn_dot_carrysave[K={K_BITS}]",
+                   output_bits=total_bits, bare_corrupted_bits=bad[None],
+                   tmr_corrupted_bits=bad["tmr"],
+                   ecc_corrupted_bits=bad["ecc"],
+                   ecc_detected_bits=detect,
+                   p_dra=fm.p_dra, p_tra=fm.p_tra)
+        if var == 0.15:
+            at_15 = dict(bad=bad, detect=detect)
+    # the PR's acceptance claim, asserted where the numbers are made
+    assert at_15["bad"][None] > 0, "±15% corner must corrupt bare runs"
+    assert at_15["bad"]["tmr"] == 0, "TMR must stay exact at ±15%"
+    assert at_15["detect"] > 0, "ECC must flag the ±15% corruption"
+    csv_rows.append(("fig_chaos_corruption", 0.0,
+                     f"bare15={at_15['bad'][None]}"
+                     f";tmr15={at_15['bad']['tmr']}"))
+
+
+def _pricing(csv_rows, graph, feeds, ref):
+    n_bits = N_WORDS * 32
+    print("\n-- redundancy pricing (closed form, fused stream) --")
+    print(f"{'scheme':<10}{'AAPs/tile':>10}{'latency_s':>14}")
+    aaps = {}
+    for scheme in SCHEMES:
+        low = drim.compile(graph, geom=GEOM).lower("resident",
+                                                   harden=scheme)
+        sched = low.cost(n_bits)
+        name = scheme or "bare"
+        aaps[scheme] = sched.aaps_sequential
+        v = low.verdict(n_bits)
+        print(f"{name:<10}{sched.aaps_sequential:>10}"
+              f"{sched.latency_s:>14.3e}")
+        record.add("chaos", experiment="pricing", scheme=name,
+                   geometry=_geometry(), workload=v.workload,
+                   op=f"bnn_dot_carrysave[K={K_BITS}]", n_bits=n_bits,
+                   aaps=sched.aaps_sequential, latency_s=sched.latency_s,
+                   aap_overhead_x=sched.aaps_sequential / aaps[None])
+    assert aaps[None] < aaps["ecc"] < aaps["tmr"] < aaps["tmr+ecc"]
+    csv_rows.append(("fig_chaos_pricing", 0.0,
+                     f"tmr_overhead_x={aaps['tmr'] / aaps[None]:.2f}"))
+
+
+def _queue_kill(csv_rows, graph, feeds, ref, seed: int, trials: int):
+    low = drim.compile(graph, geom=GEOM).lower(partition=True, n_queues=4)
+    # warm the lowering caches, then time the clean MIMD run
+    low.run(feeds)
+    t0 = time.time()
+    for _ in range(trials):
+        outs = low.run(feeds)
+    clean_s = (time.time() - t0) / trials
+    assert _corrupted_bits(outs, ref) == 0
+
+    fm = FaultModel(seed=seed, dead_queues=(2,))
+    t0 = time.time()
+    for _ in range(trials):
+        outs = low.run(feeds, faults=fm)
+    degraded_s = (time.time() - t0) / trials
+    rep = low.chaos_report
+    assert rep is not None and _corrupted_bits(outs, ref) == 0, \
+        "requeued execution must stay bit-exact"
+
+    print("\n-- queue-kill recovery (4 queues, queue 2 dead at stage 0) "
+          "--")
+    print(f"clean run        {clean_s * 1e3:>9.1f} ms")
+    print(f"degraded run     {degraded_s * 1e3:>9.1f} ms")
+    print(f"recovery path    {rep.recovery_s * 1e3:>9.1f} ms  "
+          f"(detect -> elastic_plan -> requeue x{rep.requeued_segments})")
+    print(f"survivors        {rep.survivors} (data_parallel="
+          f"{rep.data_parallel})")
+    record.add("chaos", experiment="queue_kill", seed=seed,
+               geometry=_geometry(), n_queues=4, trials=trials,
+               op=f"bnn_dot_carrysave[K={K_BITS}]",
+               dead_queues=list(rep.dead_queues),
+               survivors=list(rep.survivors),
+               detected_stages=list(rep.detected_stages),
+               requeued_segments=rep.requeued_segments,
+               clean_wall_s=clean_s, degraded_wall_s=degraded_s,
+               recovery_wall_s=rep.recovery_s,
+               data_parallel=rep.data_parallel)
+    csv_rows.append(("fig_chaos_queue_kill", degraded_s * 1e6,
+                     f"recovery_ms={rep.recovery_s * 1e3:.1f}"))
+
+
+def run(csv_rows, *, seed: int = 0, trials: int = 1):
+    graph, feeds, ref = _case(seed)
+    _corruption_sweep(csv_rows, graph, feeds, ref, seed)
+    _pricing(csv_rows, graph, feeds, ref)
+    _queue_kill(csv_rows, graph, feeds, ref, seed, trials)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(
+        description="Chaos & hardening benchmark")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trials", type=int, default=1,
+                    help="timed repetitions of the queue-kill runs")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_chaos.json")
+    args = ap.parse_args()
+    run([], seed=args.seed, trials=args.trials)
+    for path in record.flush(args.json_dir):
+        print(f"wrote {path}")

@@ -16,7 +16,12 @@ Runs:
     fig_serve           serve   — BNN LM decode tok/s + tail latency
                                   per engine vs the TPU-roofline
                                   Verdict (BENCH_serve.json)
+    fig_chaos           chaos   — Table-3 corner fault injection bare
+                                  vs TMR/ECC, redundancy AAP pricing,
+                                  queue-kill recovery latency
+                                  (BENCH_chaos.json)
     table3_reliability  Table 3 — Monte-Carlo process-variation error
+                                  rates -> BENCH_reliability.json
     roofline            brief   — 3-term roofline from the dry-run
     kernel_adjusted     brief   — kernel-adjusted memory roofline
                                   (GPU/TPU baselines; needs dry-run
@@ -35,9 +40,10 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (fig8_throughput, fig9_energy, fig_fleet,
-                        fig_fusion, fig_queue, fig_serve, kernel_adjusted,
-                        record, table3_reliability, roofline)
+from benchmarks import (fig8_throughput, fig9_energy, fig_chaos,
+                        fig_fleet, fig_fusion, fig_queue, fig_serve,
+                        kernel_adjusted, record, table3_reliability,
+                        roofline)
 
 MODULES = (
     ("fig8_throughput", fig8_throughput),
@@ -46,6 +52,7 @@ MODULES = (
     ("fig_fleet", fig_fleet),
     ("fig_queue", fig_queue),
     ("fig_serve", fig_serve),
+    ("fig_chaos", fig_chaos),
     ("table3_reliability", table3_reliability),
     ("roofline", roofline),
     ("kernel_adjusted", kernel_adjusted),

@@ -1,23 +1,31 @@
 """Table 3 reproduction: Monte-Carlo process-variation error rates.
 
-10k-trial MC over the analog DRA/TRA models (core/analog.py) at the
-paper's five variation corners.  The physical margins (DRA: Vdd/4 vs
-TRA: Vdd/6) drive the ordering; absolute rates depend on unstated PDK
-constants, so we report computed vs paper side by side.
+MC over the analog DRA/TRA models (core/analog.py) at the paper's five
+variation corners.  The physical margins (DRA: Vdd/4 vs TRA: Vdd/6)
+drive the ordering; absolute rates depend on unstated PDK constants, so
+we report computed vs paper side by side and record both per corner in
+``BENCH_reliability.json`` so the calibration drift is tracked across
+PRs, not eyeballed in stdout.
+
+    PYTHONPATH=src python -m benchmarks.table3_reliability \
+        [--trials 10000] [--seed 0]
 """
 from __future__ import annotations
 
+import argparse
 import time
 
+from benchmarks import record
 from repro.core import PAPER_TABLE3, monte_carlo_error_rates
 
 
-def run(csv_rows):
+def run(csv_rows, *, trials: int = 10_000, seed: int = 0):
     t0 = time.time()
-    rates = monte_carlo_error_rates(trials=10_000, seed=0)
+    rates = monte_carlo_error_rates(trials=trials, seed=seed)
     us = (time.time() - t0) * 1e6
 
-    print("\n-- Table 3: % erroneous results (10k MC trials) --")
+    print(f"\n-- Table 3: % erroneous results ({trials} MC trials, "
+          f"seed {seed}) --")
     print(f"{'variation':<10}{'TRA (sim)':>10}{'TRA (paper)':>12}"
           f"{'DRA (sim)':>10}{'DRA (paper)':>12}")
     ok = True
@@ -26,6 +34,11 @@ def run(csv_rows):
         print(f"±{var * 100:>4.0f}%    {r['TRA']:>10.2f}{p['TRA']:>12.2f}"
               f"{r['DRA']:>10.2f}{p['DRA']:>12.2f}")
         ok &= r["DRA"] <= r["TRA"] + 1e-9
+        record.add("reliability", corner=var, trials=trials, seed=seed,
+                   dra_sim_pct=r["DRA"], tra_sim_pct=r["TRA"],
+                   dra_paper_pct=p["DRA"], tra_paper_pct=p["TRA"],
+                   dra_abs_err=abs(r["DRA"] - p["DRA"]),
+                   tra_abs_err=abs(r["TRA"] - p["TRA"]))
     print(f"\nDRA <= TRA at every corner (paper's key claim): {ok}")
     csv_rows.append(("table3_reliability", us,
                      f"dra_better_everywhere={ok}"))
@@ -33,4 +46,13 @@ def run(csv_rows):
 
 
 if __name__ == "__main__":
-    run([])
+    ap = argparse.ArgumentParser(
+        description="Table-3 Monte-Carlo error rates")
+    ap.add_argument("--trials", type=int, default=10_000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_reliability.json")
+    args = ap.parse_args()
+    run([], trials=args.trials, seed=args.seed)
+    for path in record.flush(args.json_dir):
+        print(f"wrote {path}")

@@ -20,25 +20,28 @@ This package is the stable import surface; the implementation lives in
 `repro.pim.frontend` (tracing), `repro.pim.compiler` (pipeline + engine
 registry) and `repro.pim.offload` (the unified placement Verdict).
 """
-from repro.core import DRIM_R, DRIM_S, DrimGeometry
+from repro.core import DRIM_R, DRIM_S, DrimGeometry, FaultModel
 from repro.pim.compiler import (ENGINE_REGISTRY, PARTITIONERS,
-                                PASS_PIPELINE, Compiled, Engine,
+                                PASS_PIPELINE, Compiled, EccReport, Engine,
                                 EngineRegistry, Lowered, compile, engines,
                                 get_engine, lower)
 from repro.pim.frontend import (BitTensor, JittedFunction, TraceError,
                                 TracedProgram, copy, csa_reduce, full_add,
                                 jit, maj, popcount, select, xnor)
 from repro.pim.graph import BulkGraph
+from repro.pim.harden import HARDEN_SCHEMES, harden_graph
 from repro.pim.mesh import fleet_mesh
 from repro.pim.offload import (TpuCost, Verdict, VerdictRow, build_verdict,
                                tpu_cost)
+from repro.pim.queue import ChaosReport
 
 __all__ = [
-    "BitTensor", "BulkGraph", "Compiled", "DRIM_R", "DRIM_S",
-    "DrimGeometry", "ENGINE_REGISTRY", "Engine", "EngineRegistry",
-    "JittedFunction", "Lowered", "PARTITIONERS", "PASS_PIPELINE",
-    "TpuCost", "TraceError", "TracedProgram", "Verdict", "VerdictRow",
-    "build_verdict", "compile", "copy", "csa_reduce", "engines",
-    "fleet_mesh", "full_add", "get_engine", "jit", "lower", "maj",
-    "popcount", "select", "tpu_cost", "xnor",
+    "BitTensor", "BulkGraph", "ChaosReport", "Compiled", "DRIM_R",
+    "DRIM_S", "DrimGeometry", "ENGINE_REGISTRY", "EccReport", "Engine",
+    "EngineRegistry", "FaultModel", "HARDEN_SCHEMES", "JittedFunction",
+    "Lowered", "PARTITIONERS", "PASS_PIPELINE", "TpuCost", "TraceError",
+    "TracedProgram", "Verdict", "VerdictRow", "build_verdict", "compile",
+    "copy", "csa_reduce", "engines", "fleet_mesh", "full_add",
+    "get_engine", "harden_graph", "jit", "lower", "maj", "popcount",
+    "select", "tpu_cost", "xnor",
 ]

@@ -21,6 +21,7 @@ from .device import (MESH_AXES, DrimDevice, make_device, device_template,
                      device_run_program_banked, device_run_program_sharded)
 from .analog import (AnalogParams, dra_analog, tra_analog,
                      monte_carlo_error_rates, PAPER_TABLE3)
+from .faults import FaultModel, fault_mask, mix32, slot_ids_grid
 from .timing import (DrimGeometry, DRIM_R, DRIM_S, drim_throughput_bits,
                      drim_latency_s, area_report, T_AAP_S, T_CMD_S,
                      CMD_SLOTS_PER_AAP, DDR4_BW_BYTES_S)

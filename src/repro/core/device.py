@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from .faults import slot_ids_grid
 from .isa import run_program
 from .subarray import N_XROWS, SubArray, make_subarray, row_words
 from .timing import DrimGeometry
@@ -154,13 +155,27 @@ def device_read_row_window(dev: DrimDevice, start: int, k: int) -> jax.Array:
     return device_read_rows(dev, range(start, start + k))
 
 
-def _device_run_program(dev: DrimDevice, encoded: jax.Array) -> DrimDevice:
+def _device_run_program(dev: DrimDevice, encoded: jax.Array,
+                        faults=None, bank_lo: int = 0,
+                        banks_total: Optional[int] = None) -> DrimDevice:
     lead = dev.data.shape[:3]
     flat = SubArray(
         data=dev.data.reshape((-1,) + dev.data.shape[3:]),
         dcc=dev.dcc.reshape((-1,) + dev.dcc.shape[3:]),
     )
-    out = jax.vmap(run_program, in_axes=(0, None))(flat, encoded)
+    if faults is not None:
+        faults = faults.wave_model()
+    if faults is None:
+        out = jax.vmap(run_program, in_axes=(0, None))(flat, encoded)
+    else:
+        # Global slot ids so a bank slice (queue block) draws the same
+        # flips as the full-fleet dispatch of the identical program.
+        sids = slot_ids_grid(*lead, bank_lo=bank_lo,
+                             banks_total=banks_total).reshape(-1)
+        out = jax.vmap(
+            lambda sa, sid: run_program(sa, encoded, faults=faults,
+                                        slot_id=sid),
+            in_axes=(0, 0))(flat, sids)
     return DrimDevice(
         data=out.data.reshape(lead + out.data.shape[1:]),
         dcc=out.dcc.reshape(lead + out.dcc.shape[1:]),
@@ -172,7 +187,7 @@ _device_run_program_donating = jax.jit(_device_run_program,
 
 
 def device_run_program(dev: DrimDevice, encoded: jax.Array, *,
-                       donate: bool = False) -> DrimDevice:
+                       donate: bool = False, faults=None) -> DrimDevice:
     """Execute one encoded [n, 5] AAP stream on EVERY slot at once.
 
     One `jax.vmap` over the flattened slot axis of the `lax.scan`
@@ -183,14 +198,20 @@ def device_run_program(dev: DrimDevice, encoded: jax.Array, *,
     input becomes invalid — the output state occupies the same memory).
     The default keeps the input alive, since tests and debugging
     sessions routinely compare pre/post states.
+
+    faults: optional `core.faults.FaultModel` — seed-deterministic bit
+    flips on DRA/TRA results (fault injection skips buffer donation; the
+    fault-free path is byte-identical to a build without this kwarg).
     """
+    if faults is not None and faults.wave_model() is not None:
+        return _device_run_program(dev, encoded, faults)
     if donate:
         return _device_run_program_donating(dev, encoded)
     return _device_run_program(dev, encoded)
 
 
 def device_run_program_banked(dev: DrimDevice, encoded_by_block,
-                              bank_blocks) -> DrimDevice:
+                              bank_blocks, *, faults=None) -> DrimDevice:
     """MIMD over the bank axis: a DIFFERENT encoded stream per bank block.
 
     bank_blocks: sequence of (lo, hi) pairs partitioning [0, banks) into
@@ -210,7 +231,8 @@ def device_run_program_banked(dev: DrimDevice, encoded_by_block,
     datas, dccs = [], []
     for (lo, hi), enc in zip(bank_blocks, encoded_by_block):
         block = DrimDevice(data=dev.data[:, lo:hi], dcc=dev.dcc[:, lo:hi])
-        out = _device_run_program(block, enc)
+        out = _device_run_program(block, enc, faults,
+                                  bank_lo=lo, banks_total=dev.banks)
         datas.append(out.data)
         dccs.append(out.dcc)
     return DrimDevice(data=jnp.concatenate(datas, axis=1),
@@ -232,7 +254,7 @@ def _sharded_program_runner(mesh):
 
 
 def device_run_program_sharded(dev: DrimDevice, encoded: jax.Array,
-                               mesh) -> DrimDevice:
+                               mesh, *, faults=None) -> DrimDevice:
     """`device_run_program` over a (chips, banks) device mesh.
 
     The slot axis is embarrassingly parallel (every sub-array runs the
@@ -244,5 +266,11 @@ def device_run_program_sharded(dev: DrimDevice, encoded: jax.Array,
     1x1 mesh on a single device (bit-identical to the vmap path either
     way).
     """
+    if faults is not None and faults.active:
+        raise ValueError(
+            "fault injection is not supported on the shard_map path: "
+            "global slot ids are not visible inside a mesh shard, so "
+            "flips could not stay identical to the vmap engines; run "
+            "faulted programs with mesh=None")
     data, dcc = _sharded_program_runner(mesh)(dev.data, dev.dcc, encoded)
     return DrimDevice(data=data, dcc=dcc)

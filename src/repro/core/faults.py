@@ -1,0 +1,217 @@
+"""Table-3 fault injection: seed-deterministic bit flips on AAP results.
+
+The paper's Table 3 reports the *fraction of erroneous operations* under
+process variation — at the ±15% corner roughly 1.2% of DRAs and 5.5% of
+TRAs latch the wrong value (our Monte-Carlo in `core.analog` lands at
+2.4% / 4.8% with its calibrated margins).  `FaultModel` carries those
+per-op failure probabilities into execution: a failing DRA/TRA instance
+flips ONE bit of the charge-shared BL value before the destructive
+write-back, so every word-line the AAP touches sees the same erroneous
+level — exactly the failure mode of a marginal sense amplifier.
+
+Determinism is the whole design.  Whether an op instance fails, and
+which bit it corrupts, is a pure counter-based hash of
+(seed, op_index, slot) where `slot` is the global sub-array coordinate
+`(chip * banks + bank) * subarrays + subarray`.  No PRNG state is
+threaded anywhere, so
+
+  * the same (seed, program, geometry) always produces the same flips —
+    tests are exactly reproducible;
+  * every engine (resident, baseline scan, queued MIMD, Pallas) draws
+    the identical flip for the same op on the same physical sub-array,
+    so the differential suites keep comparing engines bit-for-bit even
+    *under* injected faults;
+  * a queue runner operating on a bank slice reproduces the flips of
+    the full-fleet dispatch by passing its `(bank_lo, banks_total)`
+    origin.
+
+`protected_ops` models guard-banded sense amplifiers: the hardening
+passes (`pim.harden`) run their maj3 voters and parity reducers on
+protected word-lines, and the interpreters suppress flips for those op
+indices.  `stuck_rows` forces word-lines to a constant after every AAP
+(a stuck-at cell), and `dead_queues` is consumed by the partitioned
+queue runner (`pim.queue`) to kill a command queue at a fence stage.
+
+Everything here is frozen/hashable so a `FaultModel` can ride inside
+the scheduler's `lru_cache` keys; `faults=None` keeps every cached
+fast path byte-identical to the fault-free build.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["FaultModel", "fault_mask", "mix32", "slot_ids_grid"]
+
+_U32 = 1 << 32
+# Distinct stream constants for the fail draw vs the bit-position draw.
+_GOLDEN = 0x9E3779B9
+_POS_SALT = 0x85EBCA6B
+
+
+def mix32(x) -> jnp.ndarray:
+    """Murmur3-style 32-bit finalizer (uint32 arithmetic, wrapping)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def slot_ids_grid(chips: int, banks_local: int, subarrays: int, *,
+                  bank_lo: int = 0,
+                  banks_total: Optional[int] = None) -> jnp.ndarray:
+    """Global slot ids, shape [chips, banks_local, subarrays] uint32.
+
+    `bank_lo`/`banks_total` anchor a bank slice (a per-bank command
+    queue's block) at its physical position so the slice draws the same
+    flips as the full-fleet dispatch.
+    """
+    bt = banks_local if banks_total is None else banks_total
+    c = jnp.arange(chips, dtype=jnp.uint32)[:, None, None]
+    b = jnp.arange(banks_local, dtype=jnp.uint32)[None, :, None]
+    s = jnp.arange(subarrays, dtype=jnp.uint32)[None, None, :]
+    return (c * jnp.uint32(bt) + jnp.uint32(bank_lo) + b) \
+        * jnp.uint32(subarrays) + s
+
+
+def fault_mask(thresh, op_index, slot_hash, word_ids,
+               n_positions: int) -> jnp.ndarray:
+    """uint32 flip mask for one AAP: one flipped bit per failing slot.
+
+    thresh: uint32 failure threshold (`p * 2^32`); python int or traced.
+    op_index: instruction counter (python int or traced scalar).
+    slot_hash: `mix32(slot_id ^ seed)` — broadcastable with `word_ids`.
+    word_ids: word index within the row, broadcastable with `slot_hash`.
+    n_positions: row width in bits (static), the bit-position modulus.
+
+    The first draw decides failure (hash < thresh); the second picks the
+    corrupted bit.  Returns a mask shaped like
+    `broadcast(slot_hash, word_ids)` that is zero everywhere except the
+    single (word, bit) of each failing slot.
+    """
+    op = jnp.asarray(op_index, jnp.uint32) * jnp.uint32(_GOLDEN)
+    x = mix32(jnp.asarray(slot_hash, jnp.uint32) ^ op)
+    fail = x < jnp.asarray(thresh, jnp.uint32)
+    pos = mix32(x ^ jnp.uint32(_POS_SALT)) % jnp.uint32(n_positions)
+    hit = fail & ((pos >> jnp.uint32(5)) == jnp.asarray(word_ids, jnp.uint32))
+    return jnp.where(hit, jnp.uint32(1) << (pos & jnp.uint32(31)),
+                     jnp.uint32(0))
+
+
+def _thresh(p: float) -> int:
+    """Failure probability -> uint32 comparison threshold."""
+    return min(int(round(p * _U32)), _U32 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Process-variation fault model for the simulated DRIM fleet.
+
+    p_dra / p_tra: probability that a DRA / TRA instance latches one
+        wrong bit (Table-3 "% erroneous operations" as a fraction).
+    seed: stream seed for the counter-based flip hash.
+    stuck_rows: ((word_line, bit), ...) — rows forced to all-0/all-1
+        after every AAP (stuck-at cells).  Word-lines beyond a program's
+        template are inert for that program.
+    dead_queues: ((queue, stage), ...) — command queues killed at a
+        fence stage of a partitioned graph (`pim.queue` chaos path);
+        a bare queue id means dead from stage 0.
+    protected_ops: op indices executed on guard-banded sense amps
+        (hardening voters / parity reducers) — never flip.
+    """
+    p_dra: float = 0.0
+    p_tra: float = 0.0
+    seed: int = 0
+    stuck_rows: Tuple[Tuple[int, int], ...] = ()
+    dead_queues: Tuple[Tuple[int, int], ...] = ()
+    protected_ops: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        for name in ("p_dra", "p_tra"):
+            p = getattr(self, name)
+            if not 0.0 <= p < 1.0:
+                raise ValueError(f"{name}={p} outside [0, 1)")
+        object.__setattr__(self, "stuck_rows",
+                           tuple((int(r), int(v))
+                                 for r, v in self.stuck_rows))
+        for _, v in self.stuck_rows:
+            if v not in (0, 1):
+                raise ValueError("stuck_rows bit values must be 0 or 1")
+        norm = []
+        for entry in self.dead_queues:
+            q, s = entry if isinstance(entry, (tuple, list)) else (entry, 0)
+            norm.append((int(q), int(s)))
+        object.__setattr__(self, "dead_queues", tuple(norm))
+        object.__setattr__(self, "protected_ops",
+                           tuple(sorted({int(i)
+                                         for i in self.protected_ops})))
+
+    @classmethod
+    def from_corner(cls, variation: float = 0.15, *, seed: int = 0,
+                    source: str = "sim", trials: int = 10_000,
+                    mc_seed: int = 0, **kw) -> "FaultModel":
+        """Build a model from a process-variation corner.
+
+        source="sim" runs `analog.monte_carlo_error_rates` for the
+        corner (calibrated simulator rates); source="paper" reads the
+        corner straight out of `analog.PAPER_TABLE3` (no Monte-Carlo —
+        cheap enough for benchmark loops).
+        """
+        from .analog import PAPER_TABLE3, monte_carlo_error_rates
+        if source == "paper":
+            try:
+                rates = PAPER_TABLE3[variation]
+            except KeyError:
+                raise ValueError(
+                    f"variation {variation} not a Table-3 corner; "
+                    f"choose from {sorted(PAPER_TABLE3)}") from None
+        elif source == "sim":
+            rates = monte_carlo_error_rates(
+                trials=trials, variations=(variation,),
+                seed=mc_seed)[variation]
+        else:
+            raise ValueError(f"unknown source {source!r} "
+                             "(expected 'sim' or 'paper')")
+        return cls(p_dra=rates["DRA"] / 100.0, p_tra=rates["TRA"] / 100.0,
+                   seed=seed, **kw)
+
+    # -- activity predicates ------------------------------------------------
+    @property
+    def flips_active(self) -> bool:
+        """True when the wave interpreters have any work to do."""
+        return bool(self.p_dra or self.p_tra or self.stuck_rows)
+
+    @property
+    def active(self) -> bool:
+        return self.flips_active or bool(self.dead_queues)
+
+    # -- derived constants --------------------------------------------------
+    @property
+    def dra_thresh(self) -> int:
+        return _thresh(self.p_dra)
+
+    @property
+    def tra_thresh(self) -> int:
+        return _thresh(self.p_tra)
+
+    # -- derivation helpers -------------------------------------------------
+    def with_protected(self, ops) -> "FaultModel":
+        """A copy with `ops` added to the protected op-index set."""
+        merged = tuple(sorted(set(self.protected_ops) | {int(i)
+                                                         for i in ops}))
+        return dataclasses.replace(self, protected_ops=merged)
+
+    def wave_model(self) -> Optional["FaultModel"]:
+        """The model a wave body should see: dead-queue entries are a
+        dispatcher concern, and a model with no flips at all drops to
+        None so the fault-free cached fast path is reused verbatim."""
+        if not self.flips_active:
+            return None
+        if self.dead_queues:
+            return dataclasses.replace(self, dead_queues=())
+        return self

@@ -29,7 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .subarray import (SubArray, aap_copy, aap_copy2, aap_dra, aap_tra)
+from .faults import fault_mask, mix32
+from .subarray import (WORD_BITS, SubArray, _write_wl, aap_copy, aap_copy2,
+                       aap_dra, aap_tra, activate_read)
 
 OP_COPY, OP_COPY2, OP_DRA, OP_TRA = 0, 1, 2, 3
 
@@ -200,11 +202,88 @@ def _step(sa: SubArray, ins: jax.Array) -> SubArray:
     return jax.lax.switch(op, branches, sa)
 
 
-def run_program(sa: SubArray, encoded: jax.Array) -> SubArray:
-    """lax.scan over an encoded [n, 5] command stream (jit-friendly)."""
-    def body(state, ins):
-        return _step(state, ins), None
-    out, _ = jax.lax.scan(body, sa, encoded)
+def _aap_dra_flipped(sa: SubArray, src1, src2, des, mask) -> SubArray:
+    """DRA whose charge-shared BL result carries an injected flip — every
+    word-line the AAP touches sees the same erroneous level."""
+    bl = (~(activate_read(sa, src1) ^ activate_read(sa, src2))) ^ mask
+    sa = _write_wl(sa, src1, bl)
+    sa = _write_wl(sa, src2, bl)
+    return _write_wl(sa, des, bl)
+
+
+def _aap_tra_flipped(sa: SubArray, src1, src2, src3, des, mask) -> SubArray:
+    a = activate_read(sa, src1)
+    b = activate_read(sa, src2)
+    c = activate_read(sa, src3)
+    bl = ((a & b) | (a & c) | (b & c)) ^ mask
+    for wl in (src1, src2, src3, des):
+        sa = _write_wl(sa, wl, bl)
+    return sa
+
+
+def _step_flipped(sa: SubArray, ins: jax.Array, mask: jax.Array) -> SubArray:
+    branches = (
+        lambda s: aap_copy(s, ins[1], ins[2]),
+        lambda s: aap_copy2(s, ins[1], ins[2], ins[3]),
+        lambda s: _aap_dra_flipped(s, ins[1], ins[2], ins[3], mask),
+        lambda s: _aap_tra_flipped(s, ins[1], ins[2], ins[3], ins[4], mask),
+    )
+    return jax.lax.switch(ins[0], branches, sa)
+
+
+def _force_stuck(sa: SubArray, stuck) -> SubArray:
+    """Pin stuck-at word-lines to their constant (normal rows only)."""
+    data = sa.data
+    for wl, v in stuck:
+        row = jnp.full((data.shape[-1],),
+                       0xFFFFFFFF if v else 0, jnp.uint32)
+        data = data.at[wl].set(row)
+    return dataclasses.replace(sa, data=data)
+
+
+def run_program(sa: SubArray, encoded: jax.Array, *,
+                faults=None, slot_id=None) -> SubArray:
+    """lax.scan over an encoded [n, 5] command stream (jit-friendly).
+
+    With a `FaultModel`, every DRA/TRA draws a counter-based flip mask
+    from (seed, op-index, slot_id) before its write-back — identical to
+    the flips the unrolled/Pallas interpreters draw for the same slot.
+    """
+    if faults is not None:
+        faults = faults.wave_model()
+    if faults is None:
+        def body(state, ins):
+            return _step(state, ins), None
+        out, _ = jax.lax.scan(body, sa, encoded)
+        return out
+
+    slot_h = mix32(jnp.asarray(0 if slot_id is None else slot_id,
+                               jnp.uint32) ^ jnp.uint32(faults.seed))
+    tdra = jnp.uint32(faults.dra_thresh)
+    ttra = jnp.uint32(faults.tra_thresh)
+    word_ids = jnp.arange(sa.words, dtype=jnp.uint32)
+    n_pos = sa.words * WORD_BITS
+    prot = (jnp.asarray(faults.protected_ops, jnp.int32)
+            if faults.protected_ops else None)
+    stuck = tuple((wl, v) for wl, v in faults.stuck_rows
+                  if wl < sa.n_rows)
+
+    def body(state, xs):
+        ins, i = xs
+        thresh = jnp.where(ins[0] == OP_DRA, tdra,
+                           jnp.where(ins[0] == OP_TRA, ttra, jnp.uint32(0)))
+        if prot is not None:
+            thresh = jnp.where((i == prot).any(), jnp.uint32(0), thresh)
+        mask = fault_mask(thresh, i, slot_h, word_ids, n_pos)
+        state = _step_flipped(state, ins, mask)
+        if stuck:
+            state = _force_stuck(state, stuck)
+        return state, None
+
+    if stuck:
+        sa = _force_stuck(sa, stuck)
+    steps = jnp.arange(encoded.shape[0], dtype=jnp.int32)
+    out, _ = jax.lax.scan(body, sa, (encoded, steps))
     return out
 
 
@@ -224,7 +303,8 @@ def run_program_py(sa: SubArray, program: Sequence[AAP]) -> SubArray:
 
 
 def run_program_unrolled(program: Sequence[AAP], rows: dict, dcc: dict, *,
-                         n_rows: int, zeros: jax.Array):
+                         n_rows: int, zeros: jax.Array,
+                         faults=None, slot_hash=None):
     """Trace-time-specialized interpreter over per-row arrays.
 
     The AAP stream is always known host-side, so instead of scanning an
@@ -242,6 +322,10 @@ def run_program_unrolled(program: Sequence[AAP], rows: dict, dcc: dict, *,
     n_rows: total normal rows of the emission template (data + x rows);
         addresses >= n_rows are the dcc1..dcc4 word-lines, resolved to
         (cell, BL̄-side) statically exactly as `subarray._dcc_split`.
+    faults / slot_hash: optional `FaultModel` plus the precomputed
+        `mix32(slot_id ^ seed)` array (broadcast-ready against the row
+        word axis).  Op indices are static here, so protected ops cost
+        nothing and fault-free instructions trace identically.
 
     Mutates and returns (rows, dcc).
     """
@@ -259,7 +343,31 @@ def run_program_unrolled(program: Sequence[AAP], rows: dict, dcc: dict, *,
             off = wl - n_rows
             dcc[off // 2] = ~bl if off % 2 else bl
 
-    for ins in program:
+    if faults is not None:
+        faults = faults.wave_model()
+    flip = None
+    stuck = ()
+    if faults is not None:
+        words = zeros.shape[-1]
+        n_pos = words * WORD_BITS
+        word_ids = jnp.arange(words, dtype=jnp.uint32)
+        slot_h = (slot_hash if slot_hash is not None
+                  else mix32(jnp.uint32(faults.seed)))
+        prot = set(faults.protected_ops)
+        thresholds = {OP_DRA: faults.dra_thresh, OP_TRA: faults.tra_thresh}
+        stuck = tuple((wl, v) for wl, v in faults.stuck_rows
+                      if wl < n_rows)
+
+        def flip(i: int, op: int, bl: jax.Array) -> jax.Array:
+            t = thresholds[op]
+            if t == 0 or i in prot:
+                return bl
+            return bl ^ fault_mask(t, i, slot_h, word_ids, n_pos)
+
+        for wl, v in stuck:
+            rows[wl] = ~zeros if v else zeros
+
+    for i, ins in enumerate(program):
         a = ins.args
         if ins.op == OP_COPY:
             write(a[1], read(a[0]))
@@ -269,13 +377,19 @@ def run_program_unrolled(program: Sequence[AAP], rows: dict, dcc: dict, *,
             write(a[2], bl)
         elif ins.op == OP_DRA:
             bl = ~(read(a[0]) ^ read(a[1]))
+            if flip is not None:
+                bl = flip(i, OP_DRA, bl)
             for wl in a:            # sources end at the BL level (Fig. 6)
                 write(wl, bl)
         else:  # OP_TRA
             x, y, z = read(a[0]), read(a[1]), read(a[2])
             bl = (x & y) | (x & z) | (y & z)
+            if flip is not None:
+                bl = flip(i, OP_TRA, bl)
             for wl in a:
                 write(wl, bl)
+        for wl, v in stuck:
+            rows[wl] = ~zeros if v else zeros
     return rows, dcc
 
 

@@ -33,10 +33,13 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.isa import (AAP, KSTREAM_COLS, dcc_state_rows,
-                            encode_kernel_stream, kstream_slot)
+from repro.core.faults import fault_mask, mix32, slot_ids_grid
+from repro.core.isa import (AAP, KSTREAM_COLS, OP_DRA, OP_TRA,
+                            dcc_state_rows, encode_kernel_stream,
+                            kstream_slot)
 
 # Word columns per grid cell: 4096 lane-words x ~32 state rows is
 # ~0.5 MiB of VMEM, far under budget, and a multiple of the 128-lane VPU.
@@ -100,13 +103,92 @@ def _interp_kernel(n_in: int, n_state: int,
         [~state[row] if neg else state[row] for row, neg in out_slots])
 
 
+def _interp_kernel_faulted(n_in: int, n_state: int,
+                           out_slots: Tuple[Tuple[int, int], ...],
+                           n_positions: int,
+                           stuck: Tuple[Tuple[int, int], ...],
+                           stream_ref, meta_ref, thresh_ref,
+                           in_ref, out_ref):
+    """Fault-injecting twin of `_interp_kernel`.
+
+    Two extra inputs carry the fault state as data: `meta_ref` is
+    [2, block] uint32 — per-column `mix32(global_slot ^ seed)` and
+    per-column word index — and `thresh_ref` is the per-instruction
+    failure threshold ([n_ins, 1] uint32, zero for copies and protected
+    ops).  Each DRA/TRA draws the same counter-based flip mask the lax
+    engines draw for its (op-index, slot) and XORs it onto the BL value
+    before the write-back replay; `stuck` pins stuck-at state rows
+    after every instruction.  A separate kernel so the fault-free build
+    stays byte-identical to `_interp_kernel`.
+    """
+    block = in_ref.shape[1]
+    stream = stream_ref[...]
+    thresh = thresh_ref[...]
+    meta = meta_ref[...]
+    slot_h, word_ids = meta[0], meta[1]
+
+    def force(st):
+        for row, v in stuck:
+            const = jnp.full((1, block),
+                             0xFFFFFFFF if v else 0, jnp.uint32)
+            st = jax.lax.dynamic_update_slice(st, const, (row, 0))
+        return st
+
+    state = jnp.zeros((n_state, block), jnp.uint32)
+    state = jax.lax.dynamic_update_slice(state, in_ref[...], (0, 0))
+    state = force(state)
+
+    def step(i, st):
+        ins = jax.lax.dynamic_slice(stream, (i, 0), (1, KSTREAM_COLS))[0]
+
+        def rd(k):
+            row = jax.lax.dynamic_slice(st, (ins[1 + 2 * k], 0),
+                                        (1, block))[0]
+            return row ^ _negmask(ins[2 + 2 * k])
+
+        r0, r1, r2 = rd(0), rd(1), rd(2)
+        bl = jax.lax.switch(ins[0], (
+            lambda a, b, c: a,                            # COPY/COPY2
+            lambda a, b, c: ~(a ^ b),                     # DRA: BL = XNOR
+            lambda a, b, c: (a & b) | (a & c) | (b & c),  # TRA: MAJ3
+        ), r0, r1, r2)
+        t = jax.lax.dynamic_slice(thresh, (i, 0), (1, 1))[0, 0]
+        bl = bl ^ fault_mask(t, i, slot_h, word_ids, n_positions)
+        for k in range(4):                     # write slots, in arg order
+            row, neg, en = ins[7 + 3 * k], ins[8 + 3 * k], ins[9 + 3 * k]
+            cur = jax.lax.dynamic_slice(st, (row, 0), (1, block))
+            val = jnp.where(en != 0, (bl ^ _negmask(neg))[None, :], cur)
+            st = jax.lax.dynamic_update_slice(st, val, (row, 0))
+        return force(st)
+
+    if stream.shape[0]:
+        state = jax.lax.fori_loop(0, stream.shape[0], step, state)
+    out_ref[...] = jnp.stack(
+        [~state[row] if neg else state[row] for row, neg in out_slots])
+
+
+def _op_thresholds(program: Tuple[AAP, ...], faults) -> np.ndarray:
+    """[n_ins, 1] uint32 per-instruction failure thresholds."""
+    tvec = np.zeros((len(program), 1), np.uint32)
+    prot = set(faults.protected_ops)
+    for i, ins in enumerate(program):
+        if i in prot:
+            continue
+        if ins.op == OP_DRA:
+            tvec[i, 0] = faults.dra_thresh
+        elif ins.op == OP_TRA:
+            tvec[i, 0] = faults.tra_thresh
+    return tvec
+
+
 def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
 def pallas_wave_fn(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
                    n_rows: int, *, interpret: bool | None = None,
-                   block_cols: int = BLOCK_COLS):
+                   block_cols: int = BLOCK_COLS,
+                   faults=None, bank_geom=None):
     """Build the `one_wave(tiles)` body behind `engine="pallas"`.
 
     Same contract as `scheduler.wave_fn`: maps one wave's staged tile
@@ -114,10 +196,25 @@ def pallas_wave_fn(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
     readback block [len(result_rows), ...].  The stream is encoded
     host-side once per (program, n_rows) signature; the enclosing
     `_wave_runner` memoizes the compiled executor.
+
+    With a `FaultModel`, per-column slot hashes and per-op thresholds
+    ride into the kernel as extra inputs and the fault-injecting kernel
+    twin replays the stream — drawing the exact flips the lax engines
+    draw for the same (seed, op-index, global slot).  `bank_geom` =
+    (bank_lo, banks_total) anchors per-queue payloads at their physical
+    bank offset.  Padded grid columns may draw (discarded) flips; they
+    are sliced away with the padding.
     """
     if interpret is None:
         interpret = default_interpret()
+    if faults is not None:
+        faults = faults.wave_model()
     out_slots = tuple(kstream_slot(r, n_rows) for r in result_rows)
+    bank_lo, banks_total = bank_geom if bank_geom is not None else (0, None)
+    stuck = ()
+    if faults is not None:
+        stuck = tuple((wl, v) for wl, v in faults.stuck_rows
+                      if wl < n_rows)
 
     if not len(program):
         # Degenerate stream: readback of an untouched sub-array.
@@ -126,6 +223,9 @@ def pallas_wave_fn(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
 
             def pick(row, neg):
                 v = tiles[row] if row < tiles.shape[0] else zeros
+                for srow, sval in stuck:
+                    if srow == row:
+                        v = ~zeros if sval else zeros
                 return ~v if neg else v
             return jnp.stack([pick(row, neg) for row, neg in out_slots])
         return one_wave
@@ -134,6 +234,8 @@ def pallas_wave_fn(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
     n_ins = stream.shape[0]
     n_state = dcc_state_rows(n_rows)
     n_out = len(result_rows)
+    thresh = (jnp.asarray(_op_thresholds(program, faults))
+              if faults is not None else None)
 
     def one_wave(tiles: jax.Array) -> jax.Array:
         n_in = tiles.shape[0]
@@ -142,14 +244,38 @@ def pallas_wave_fn(program: Tuple[AAP, ...], result_rows: Tuple[int, ...],
         bc = min(block_cols, _round_up(total, _LANES))
         padded = _round_up(total, bc)
         flat = jnp.pad(flat, ((0, 0), (0, padded - total)))
-        out = pl.pallas_call(
-            functools.partial(_interp_kernel, n_in, n_state, out_slots),
-            grid=(padded // bc,),
-            in_specs=[pl.BlockSpec((n_ins, KSTREAM_COLS), lambda j: (0, 0)),
-                      pl.BlockSpec((n_in, bc), lambda j: (0, j))],
-            out_specs=pl.BlockSpec((n_out, bc), lambda j: (0, j)),
-            out_shape=jax.ShapeDtypeStruct((n_out, padded), jnp.uint32),
-            interpret=interpret,
-        )(stream, flat)
+        stream_spec = pl.BlockSpec((n_ins, KSTREAM_COLS), lambda j: (0, 0))
+        in_spec = pl.BlockSpec((n_in, bc), lambda j: (0, j))
+        out_spec = pl.BlockSpec((n_out, bc), lambda j: (0, j))
+        if faults is None:
+            out = pl.pallas_call(
+                functools.partial(_interp_kernel, n_in, n_state, out_slots),
+                grid=(padded // bc,),
+                in_specs=[stream_spec, in_spec],
+                out_specs=out_spec,
+                out_shape=jax.ShapeDtypeStruct((n_out, padded), jnp.uint32),
+                interpret=interpret,
+            )(stream, flat)
+        else:
+            c, b, s, w = tiles.shape[1:]
+            grid = slot_ids_grid(c, b, s, bank_lo=bank_lo,
+                                 banks_total=banks_total)
+            slot_h = mix32(grid ^ jnp.uint32(faults.seed)).reshape(-1)
+            meta = jnp.stack([jnp.repeat(slot_h, w),
+                              jnp.tile(jnp.arange(w, dtype=jnp.uint32),
+                                       grid.size)])
+            meta = jnp.pad(meta, ((0, 0), (0, padded - total)))
+            out = pl.pallas_call(
+                functools.partial(_interp_kernel_faulted, n_in, n_state,
+                                  out_slots, w * 32, stuck),
+                grid=(padded // bc,),
+                in_specs=[stream_spec,
+                          pl.BlockSpec((2, bc), lambda j: (0, j)),
+                          pl.BlockSpec((n_ins, 1), lambda j: (0, 0)),
+                          in_spec],
+                out_specs=out_spec,
+                out_shape=jax.ShapeDtypeStruct((n_out, padded), jnp.uint32),
+                interpret=interpret,
+            )(stream, meta, thresh, flat)
         return out[:, :total].reshape((n_out,) + tiles.shape[1:])
     return one_wave

@@ -31,7 +31,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Any, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +82,10 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--arrive-every", type=int, default=1,
                     help="waves between request arrivals in "
                     "--continuous mode (0 = all arrive at wave 0)")
+    ap.add_argument("--resilient", action="store_true",
+                    help="wrap the decode fn in retry-with-backoff and "
+                    "a TPU-engine fallback; incidents land in the "
+                    "stats record instead of killing the server")
     for flag, _field in _CFG_OVERRIDES:
         ap.add_argument(f"--{flag.replace('_', '-')}", type=int,
                         default=0, help=argparse.SUPPRESS)
@@ -159,6 +163,63 @@ def _assert_packed_bit_exact(cfg, dense_params, packed_params, tok,
                                "the dense STE path")
 
 
+def make_resilient_decode(cfg, ctx_len: int, temperature: float,
+                          engine: str, n_queues, *, max_retries: int = 2,
+                          backoff_s: float = 0.05,
+                          sleep: Callable[[float], None] = time.sleep,
+                          make_fn: Callable = make_decode_fn,
+                          ) -> Tuple[Callable, Dict[str, Any],
+                                     List[Dict[str, Any]]]:
+    """Graceful degradation for the serving hot path.
+
+    A decode step that raises (a DRIM engine wedged mid-lowering, a
+    dead queue surfacing as a dispatch error) is retried with
+    exponential backoff on the SAME engine; once retries exhaust, the
+    server rebuilds the decode fn on the "tpu" comparator engine —
+    numerically the oracle the DRIM engines are held bit-identical to,
+    so tokens keep flowing at reduced fidelity-of-simulation, not
+    reduced correctness — and keeps serving.  Every failure appends a
+    structured incident record (engine, attempt, error, action) so the
+    operator sees the degradation instead of a dead server.
+
+    Returns (decode_fn, state, incidents); `state["engine"]` tracks
+    the engine currently serving.  `sleep`/`make_fn` are injectable so
+    tests can drive the failure path with fakes and no wall-clock.
+    """
+    state: Dict[str, Any] = {
+        "engine": engine,
+        "fn": make_fn(cfg, ctx_len, temperature, engine, n_queues)}
+    incidents: List[Dict[str, Any]] = []
+
+    def dec(*args):
+        attempt, delay = 0, backoff_s
+        while True:
+            try:
+                return state["fn"](*args)
+            except Exception as e:  # noqa: BLE001 — any engine failure
+                rec = {"engine": state["engine"], "attempt": attempt,
+                       "error": f"{type(e).__name__}: {e}"[:200]}
+                attempt += 1
+                if attempt <= max_retries:
+                    rec["action"] = f"retry(backoff={delay:g}s)"
+                    incidents.append(rec)
+                    sleep(delay)
+                    delay *= 2
+                elif state["engine"] != "tpu":
+                    rec["action"] = "fallback:tpu"
+                    incidents.append(rec)
+                    state["engine"] = "tpu"
+                    state["fn"] = make_fn(cfg, ctx_len, temperature,
+                                          "tpu", n_queues)
+                    attempt, delay = 0, backoff_s
+                else:
+                    rec["action"] = "abort"
+                    incidents.append(rec)
+                    raise
+
+    return dec, state, incidents
+
+
 def _percentiles_ms(step_times: List[float]) -> Tuple[float, float]:
     if not step_times:
         return 0.0, 0.0
@@ -209,8 +270,14 @@ def run_serve(args) -> Tuple[np.ndarray, Dict[str, Any]]:
         st = _setup(args, cfg, mesh)
         ctx_len, key, params, caches = (st["ctx_len"], st["key"],
                                         st["params"], st["caches"])
-        dec = make_decode_fn(cfg, ctx_len, args.temperature, args.engine,
-                             args.n_queues)
+        if args.resilient:
+            dec, eng_state, incidents = make_resilient_decode(
+                cfg, ctx_len, args.temperature, args.engine,
+                args.n_queues)
+        else:
+            dec = make_decode_fn(cfg, ctx_len, args.temperature,
+                                 args.engine, args.n_queues)
+            eng_state, incidents = {"engine": args.engine}, []
 
         tok = jnp.argmax(st["logits"][:, -1, :], -1)[:, None] \
             .astype(jnp.int32)
@@ -244,7 +311,7 @@ def run_serve(args) -> Tuple[np.ndarray, Dict[str, Any]]:
         tok_per_s = (args.batch * (args.gen - 1)
                      / max(sum(step_times), 1e-9))
         stats = {
-            "arch": cfg.arch, "engine": args.engine,
+            "arch": cfg.arch, "engine": eng_state["engine"],
             "packed": bool(args.packed), "batch": args.batch,
             "gen": args.gen, "prefill_s": round(st["prefill_s"], 3),
             "compile_s": round(compile_s, 3),
@@ -253,6 +320,9 @@ def run_serve(args) -> Tuple[np.ndarray, Dict[str, Any]]:
             "decode_p99_ms": round(p99, 3),
             "sample_ids": gen[0, :8].tolist(),
         }
+        if args.resilient:
+            stats["requested_engine"] = args.engine
+            stats["incidents"] = incidents
         return gen, stats
 
 

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AAP, DRIM_R, DrimGeometry
+from repro.core import AAP, DRIM_R, DrimGeometry, FaultModel
 from repro.core.subarray import N_XROWS, WORD_BITS
 from repro.pim.frontend import JittedFunction, TracedProgram, jit
 from repro.pim.graph import (DEFAULT_ROW_BUDGET, BulkGraph, FusedProgram,
@@ -125,32 +125,33 @@ def engines() -> Tuple[str, ...]:
 
 def _simd_dispatch(engine_name: str) -> Callable:
     def dispatch(arrays, program, result_rows, *, n_rows, geom,
-                 mesh=None, n_queues=None):
+                 mesh=None, n_queues=None, faults=None):
         from repro.pim.scheduler import run_waves, stage_rows
         staged, tiles, waves = stage_rows(
             arrays, geom=geom,
             mesh=mesh if engine_name == "resident" else None)
         outs = run_waves(staged, program, result_rows, n_rows=n_rows,
-                         mesh=mesh, engine=engine_name)
+                         mesh=mesh, engine=engine_name, faults=faults)
         return outs, tiles, waves
     return dispatch
 
 
 def _queued_dispatch(arrays, program, result_rows, *, n_rows, geom,
-                     mesh=None, n_queues=None):
+                     mesh=None, n_queues=None, faults=None):
     from repro.pim.queue import dispatch_uniform_queued
     return dispatch_uniform_queued(arrays, program, result_rows,
                                    n_rows=n_rows, geom=geom, mesh=mesh,
-                                   n_queues=n_queues)
+                                   n_queues=n_queues, faults=faults)
 
 
 def _pallas_dispatch(arrays, program, result_rows, *, n_rows, geom,
-                     mesh=None, n_queues=None):
+                     mesh=None, n_queues=None, faults=None):
     if mesh is not None:
         raise ValueError("engine 'pallas' runs unsharded — use "
                          "engine='resident' for shard_map fleet meshes")
     return _simd_dispatch("pallas")(arrays, program, result_rows,
-                                    n_rows=n_rows, geom=geom)
+                                    n_rows=n_rows, geom=geom,
+                                    faults=faults)
 
 
 def _lift_op_plain(low: "Lowered", n_bits: int,
@@ -242,8 +243,9 @@ class Compiled:
         self.traced = traced
 
     def lower(self, engine: Optional[str] = None, *, mesh=None,
-              n_queues: Optional[int] = None,
-              partition=None) -> "Lowered":
+              n_queues: Optional[int] = None, partition=None,
+              harden: Optional[str] = None,
+              faults: Optional[FaultModel] = None) -> "Lowered":
         """Run the registered pass pipeline and bind an engine.
 
         engine: any `EngineRegistry` name; defaults to "resident"
@@ -251,17 +253,31 @@ class Compiled:
         (default "greedy" strategy), a `PARTITIONERS` key, or an int
         (queue count, greedy strategy) — splits the graph ACROSS queues
         into fence-staged per-bank sub-programs (MIMD).
+
+        harden: None | "tmr" | "ecc" | "tmr+ecc" — rewrite the graph
+        for fault tolerance BEFORE fusing (`pim.harden.harden_graph`):
+        "tmr" triples every node and votes each result through a
+        protected maj3; "ecc" duplicates the compute and folds the
+        replica outputs into a parity row read back as detection
+        evidence (`Lowered.last_ecc` after each run).  The extra AAPs
+        are real program text, so `cost()`/`verdict()` price them.
+
+        faults: default `core.FaultModel` for every `run()` of this
+        lowering (a per-call `run(..., faults=...)` overrides it).
         """
         st = _LoweringState(compiled=self, engine_name=engine, mesh=mesh,
-                            n_queues=n_queues, partition=partition)
+                            n_queues=n_queues, partition=partition,
+                            harden=harden, faults=faults)
         for p in PASS_PIPELINE:
             p.fn(st)
         return Lowered(
             kind=st.kind, engine=st.engine, geom=self.geom,
             mesh=st.mesh, n_queues=st.n_queues, partition=st.partition,
-            row_budget=self.row_budget, op=self.op, graph=self.graph,
+            row_budget=self.row_budget, op=self.op, graph=st.graph,
             traced=self.traced, fp=st.fp, gp=st.gp, program=st.program,
-            result_rows=st.result_rows, n_rows=st.n_rows, aaps=st.aaps)
+            result_rows=st.result_rows, n_rows=st.n_rows, aaps=st.aaps,
+            harden=st.harden, default_faults=st.faults,
+            protected_nodes=st.protected_nodes)
 
 
 def compile(src, *, geom: Optional[DrimGeometry] = None,
@@ -305,8 +321,12 @@ class _LoweringState:
     mesh: Any
     n_queues: Optional[int]
     partition: Any
+    harden: Optional[str] = None
+    faults: Optional[FaultModel] = None
     kind: str = ""
     engine: Optional[Engine] = None
+    graph: Optional[BulkGraph] = None     # working graph (post-harden)
+    protected_nodes: frozenset = frozenset()
     fp: Optional[FusedProgram] = None
     gp: Optional[GraphPartition] = None
     program: Tuple[AAP, ...] = ()
@@ -357,7 +377,28 @@ def _pass_canonicalize(st: _LoweringState) -> None:
         raise ValueError(
             f"n_queues only applies to the queued engine, not "
             f"{st.engine.name!r}")
+    if st.harden is not None and c.kind != "graph":
+        raise ValueError("harden= needs a graph source; a single "
+                         "Table-2 op has no redundancy to compile in")
+    if st.faults is not None:
+        if not isinstance(st.faults, FaultModel):
+            raise TypeError("faults= expects a core.FaultModel")
+        if st.faults.active and st.mesh is not None:
+            raise ValueError(
+                "fault injection runs unsharded (mesh=None): global "
+                "slot ids are not visible inside a shard_map shard")
+    st.graph = c.graph
     st.kind = c.kind
+
+
+def _pass_harden(st: _LoweringState) -> None:
+    """Optionally rewrite the graph for fault tolerance (TMR voting
+    and/or parity ECC) before fusion, so the redundancy is ordinary
+    program text every engine executes and every cost model prices."""
+    if st.harden is None:
+        return
+    from repro.pim.harden import harden_graph
+    st.graph, st.protected_nodes = harden_graph(st.graph, st.harden)
 
 
 def _pass_fuse(st: _LoweringState) -> None:
@@ -371,7 +412,7 @@ def _pass_fuse(st: _LoweringState) -> None:
         st.result_rows = tuple(RESULT_ROWS[c.op])
         st.n_rows = N_DATA_ROWS + N_XROWS
     else:
-        st.fp = compile_graph(c.graph, row_budget=c.row_budget)
+        st.fp = compile_graph(st.graph, row_budget=c.row_budget)
         st.program = st.fp.program
         st.result_rows = st.fp.readback_rows
         st.n_rows = st.fp.template_rows
@@ -383,7 +424,7 @@ def _pass_partition(st: _LoweringState) -> None:
     if st.partition is None:
         return
     st.gp = PARTITIONERS[st.partition](
-        st.compiled.graph, st.n_queues,
+        st.graph, st.n_queues,
         row_budget=st.compiled.row_budget)
     st.kind = "partition"
     st.aaps = st.gp.critical_path_aaps_per_tile
@@ -407,6 +448,7 @@ class Pass:
 
 PASS_PIPELINE: Tuple[Pass, ...] = (
     Pass("canonicalize", _pass_canonicalize),
+    Pass("harden", _pass_harden),
     Pass("fuse", _pass_fuse),
     Pass("partition", _pass_partition),
     Pass("encode", _pass_encode),
@@ -416,6 +458,19 @@ PASS_PIPELINE: Tuple[Pass, ...] = (
 # ---------------------------------------------------------------------------
 # Lowered: run / cost / verdict
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EccReport:
+    """Host-side parity verdict of one `harden="ecc"` run: the primary
+    outputs xor-reduced against the device parity row."""
+
+    mismatch_bits: int                 # popcount of the parity diff
+    words: int                         # parity row width compared
+
+    @property
+    def corrupted(self) -> bool:
+        return self.mismatch_bits > 0
+
 
 class Lowered:
     """A program bound to (engine, geometry, mesh, queues, partition).
@@ -429,7 +484,9 @@ class Lowered:
 
     def __init__(self, *, kind, engine, geom, mesh, n_queues, partition,
                  row_budget, op, graph, traced, fp, gp, program,
-                 result_rows, n_rows, aaps) -> None:
+                 result_rows, n_rows, aaps, harden=None,
+                 default_faults=None,
+                 protected_nodes=frozenset()) -> None:
         self.kind = kind
         self.engine = engine
         self.geom = geom
@@ -446,18 +503,68 @@ class Lowered:
         self.result_rows = result_rows
         self.n_rows = n_rows
         self.aaps = aaps
+        self.harden = harden
+        self.default_faults = default_faults
+        self.protected_nodes = frozenset(protected_nodes)
         self.schedule = None          # measured by the last run()
+        self.last_ecc = None          # EccReport of the last ecc run()
+        self.chaos_report = None      # ChaosReport of the last run()
 
     # -- execution ---------------------------------------------------------
-    def run(self, *args, n_bits: Optional[int] = None):
+    def _resolve_faults(self, faults):
+        """Per-call faults override the lowering default; hardened
+        lowerings add their protected op spans (voter/parity AAPs run
+        on guard-banded sense amplifiers and never flip); comparator
+        engines ignore faults entirely (the clean oracle IS the
+        graceful-degradation fallback)."""
+        if faults is None:
+            faults = self.default_faults
+        if faults is None or not self.engine.device:
+            return None
+        if not isinstance(faults, FaultModel):
+            raise TypeError("faults= expects a core.FaultModel")
+        if not faults.active:
+            return None
+        if self.mesh is not None:
+            raise ValueError(
+                "fault injection runs unsharded (mesh=None): global "
+                "slot ids are not visible inside a shard_map shard")
+        if self.protected_nodes and self.fp is not None:
+            spans = {i: (lo, hi) for i, lo, hi in self.fp.node_spans}
+            ops = [k for i in self.protected_nodes
+                   for k in range(*spans[i])]
+            faults = faults.with_protected(ops)
+        return faults
+
+    def _check_ecc(self, results):
+        """Host side of the parity scheme: xor-reduce the primary
+        outputs and diff against the device parity row."""
+        parity = np.asarray(results.pop("__ecc__"), dtype=np.uint32)
+        expect = np.zeros_like(parity)
+        for arr in results.values():
+            expect = expect ^ np.asarray(arr, dtype=np.uint32)
+        diff = (parity ^ expect).view(np.uint8)
+        bits = int(np.unpackbits(diff).sum())
+        self.last_ecc = EccReport(mismatch_bits=bits,
+                                  words=int(parity.size))
+        return results
+
+    def run(self, *args, n_bits: Optional[int] = None,
+            faults: Optional[FaultModel] = None):
         """Execute.  Op sources take positional word arrays (one per
         operand) and return a result tuple; graph sources take either a
         {input_name: array} dict or — for traced programs — positional
         arrays in the traced argument order, and return outputs shaped
         like the traced function's own return value (a plain dict for
-        hand-built graphs)."""
+        hand-built graphs).
+
+        faults: a `core.FaultModel` for THIS run only (overrides the
+        lowering-time default).  With `harden="ecc"` lowerings the
+        detection evidence of each run lands on `self.last_ecc`.
+        """
+        faults = self._resolve_faults(faults)
         if self.kind == "op":
-            return self._run_op(args, n_bits)
+            return self._run_op(args, n_bits, faults)
         if self.traced is not None and not (
                 len(args) == 1 and isinstance(args[0], dict)):
             feeds = self.traced.feeds_for(args)
@@ -472,14 +579,16 @@ class Lowered:
         else:
             raise ValueError("graph lowering expects a feeds dict (or "
                              "positional planes for traced programs)")
-        outs = (self._run_partitioned(feeds, n_bits)
+        outs = (self._run_partitioned(feeds, n_bits, faults)
                 if self.kind == "partition"
-                else self._run_graph(feeds, n_bits))
+                else self._run_graph(feeds, n_bits, faults))
+        if self.harden is not None and "ecc" in self.harden:
+            outs = self._check_ecc(dict(outs))
         if self.traced is not None:
             return self.traced.restructure(outs)
         return outs
 
-    def _run_op(self, operands, n_bits):
+    def _run_op(self, operands, n_bits, faults=None):
         arity = OP_ARITY[self.op]
         if len(operands) != arity:
             raise ValueError(f"{self.op} takes {arity} operands, got "
@@ -506,7 +615,8 @@ class Lowered:
             raise ValueError("n_bits out of range for the given operands")
         outs, tiles, waves = self.engine.dispatch(
             ops, self.program, self.result_rows, n_rows=self.n_rows,
-            geom=self.geom, mesh=self.mesh, n_queues=self.n_queues)
+            geom=self.geom, mesh=self.mesh, n_queues=self.n_queues,
+            faults=faults)
         results = tuple(outs[:, i].reshape(-1)[:n_words]
                         for i in range(len(self.result_rows)))
         self.schedule = self.engine.lift_op(self, n_bits, tiles, waves)
@@ -539,7 +649,7 @@ class Lowered:
                 f"({(n_words - 1) * WORD_BITS}, {n_words * WORD_BITS}]")
         return n_bits
 
-    def _run_graph(self, feeds, n_bits):
+    def _run_graph(self, feeds, n_bits, faults=None):
         arrays, n_words, _ = self._check_feeds(feeds)
         n_bits = self._resolve_n_bits(n_bits, n_words)
         if not self.engine.device:
@@ -556,7 +666,7 @@ class Lowered:
             outs, tiles, waves = self.engine.dispatch(
                 [arrays[n] for n in fp.loaded_inputs], fp.program,
                 fp.readback_rows, n_rows=fp.template_rows, geom=geom,
-                mesh=self.mesh, n_queues=self.n_queues)
+                mesh=self.mesh, n_queues=self.n_queues, faults=faults)
             col = {row: i for i, row in enumerate(fp.readback_rows)}
             for name, row in fp.device_outputs:
                 results[name] = outs[:, col[row]].reshape(-1)[:n_words]
@@ -564,16 +674,18 @@ class Lowered:
         self.schedule = self.engine.lift_graph(self, sched)
         return results
 
-    def _run_partitioned(self, feeds, n_bits):
+    def _run_partitioned(self, feeds, n_bits, faults=None):
         from repro.pim.queue import _execute_partitioned
         arrays, n_words, _ = self._check_feeds(feeds)
         n_bits = self._resolve_n_bits(n_bits, n_words)
-        results, sched = _execute_partitioned(
+        results, sched, chaos = _execute_partitioned(
             self.graph, arrays, gp=self.gp, geom=self.geom,
             n_bits=n_bits, mesh=self.mesh,
             body_engine=("pallas" if self.engine.name == "pallas"
-                         else "queued"))
+                         else "queued"),
+            faults=faults, protected_nodes=self.protected_nodes)
         self.schedule = sched
+        self.chaos_report = chaos
         return results
 
     # -- pricing -----------------------------------------------------------
@@ -618,10 +730,13 @@ class Lowered:
 def lower(src, *, geom: Optional[DrimGeometry] = None,
           engine: Optional[str] = None, mesh=None,
           n_queues: Optional[int] = None, partition=None,
+          harden: Optional[str] = None,
+          faults: Optional[FaultModel] = None,
           row_budget: Optional[int] = DEFAULT_ROW_BUDGET) -> Lowered:
     """Convenience: `compile(src).lower(...)` in one call."""
     return compile(src, geom=geom, row_budget=row_budget).lower(
-        engine=engine, mesh=mesh, n_queues=n_queues, partition=partition)
+        engine=engine, mesh=mesh, n_queues=n_queues, partition=partition,
+        harden=harden, faults=faults)
 
 
 # ---------------------------------------------------------------------------
@@ -644,6 +759,8 @@ def lower_cached(src, *, key: Optional[Tuple] = None,
                  geom: Optional[DrimGeometry] = None,
                  engine: Optional[str] = None, mesh=None,
                  n_queues: Optional[int] = None, partition=None,
+                 harden: Optional[str] = None,
+                 faults: Optional[FaultModel] = None,
                  row_budget: Optional[int] = DEFAULT_ROW_BUDGET) -> Lowered:
     """`compile(src).lower(...)` memoized for the LIFE OF THE PROCESS.
 
@@ -667,13 +784,13 @@ def lower_cached(src, *, key: Optional[Tuple] = None,
             "lower_cached needs a hashable src or an explicit key= "
             "identifying the program") from None
     full_key = (ident, geom, engine, mesh, n_queues, partition,
-                row_budget)
+                harden, faults, row_budget)
     low = _LOWER_CACHE.get(full_key)
     if low is None:
         LOWER_CACHE_STATS["misses"] += 1
         low = compile(src, geom=geom, row_budget=row_budget).lower(
             engine=engine, mesh=mesh, n_queues=n_queues,
-            partition=partition)
+            partition=partition, harden=harden, faults=faults)
         _LOWER_CACHE[full_key] = low
     else:
         LOWER_CACHE_STATS["hits"] += 1

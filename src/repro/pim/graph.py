@@ -177,6 +177,11 @@ class FusedProgram:
     n_nodes: int
     unfused_aaps_per_tile: int      # Table-2 sum of the execute_oplist chain
     unfused_ddr_rows_per_tile: int  # per-op loads + readbacks of that chain
+    # (node index, first AAP, one-past-last AAP) per emitting node —
+    # how graph-level properties (a hardened voter's protected status)
+    # map onto positions in the fused stream.  Copies emit nothing and
+    # have no span.
+    node_spans: Tuple[Tuple[int, int, int], ...] = ()
 
     @property
     def aaps_per_tile(self) -> int:
@@ -268,7 +273,7 @@ def compile_graph(graph: BulkGraph, *,
         n_rows += 1
         return n_rows - 1
 
-    plan = []   # (opname, operand_rows, consumed_flags, result_rows)
+    plan = []   # (node idx, opname, operand_rows, consumed_flags, res_rows)
     for i, (opname, opnds, res) in enumerate(graph.nodes):
         if opname == "copy":
             continue
@@ -295,7 +300,7 @@ def compile_graph(graph: BulkGraph, *,
             if last_use[s] == i:
                 free_rows.append(row_of[s])
         res_rows = tuple(alloc() for _ in res)
-        plan.append((opname, rows, tuple(consumed), res_rows))
+        plan.append((i, opname, rows, tuple(consumed), res_rows))
         for v, r in zip(res, res_rows):
             row_of[storage_of[v]] = r
             if last_use[storage_of[v]] < 0:          # dead on arrival
@@ -309,8 +314,11 @@ def compile_graph(graph: BulkGraph, *,
     # -- emission ----------------------------------------------------------
     sa = make_subarray(n_data=max(n_rows, 1), row_bits=WORD_BITS)
     program: List[AAP] = []
-    for opname, rows, consumed, res_rows in plan:
+    node_spans: List[Tuple[int, int, int]] = []
+    for i, opname, rows, consumed, res_rows in plan:
+        start = len(program)
         program.extend(_emit_node(sa, opname, rows, consumed, res_rows))
+        node_spans.append((i, start, len(program)))
 
     device_outputs = tuple((name, row_of[s])
                            for name, s in device_output_storages)
@@ -325,7 +333,8 @@ def compile_graph(graph: BulkGraph, *,
         device_outputs=device_outputs,
         readback_rows=tuple(dict.fromkeys(r for _, r in device_outputs)),
         n_nodes=n_nodes, unfused_aaps_per_tile=unfused_aaps,
-        unfused_ddr_rows_per_tile=unfused_ddr)
+        unfused_ddr_rows_per_tile=unfused_ddr,
+        node_spans=tuple(node_spans))
 
 
 def _emit_node(sa: SubArray, opname: str, rows: Tuple[int, ...],

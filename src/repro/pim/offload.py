@@ -253,6 +253,11 @@ def build_verdict(lowered, n_bits: int, *,
             rows = (_queued_row(sched),) + rows
         name = (lowered.traced.name if lowered.traced is not None
                 else f"graph[{base.n_nodes}]")
+        if getattr(lowered, "harden", None):
+            # The redundancy AAPs are in every row above — make the
+            # workload say so, or hardened vs bare verdicts look like
+            # the same program priced inconsistently.
+            name = f"{name}+{lowered.harden}"
         n_ops = base.n_nodes
     return Verdict(workload=name, n_bits=n_bits, n_nodes=n_ops,
                    rows=rows, simulated=simulated)

@@ -36,7 +36,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +46,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 
 from repro.core import (AAP, CMDS_PER_AAP, DRIM_R, DrimGeometry,
-                        simulate_bus_issue)
+                        FaultModel, simulate_bus_issue)
 from repro.core.subarray import WORD_BITS
 from repro.core.timing import CMD_SLOTS_PER_AAP, ddr_rows_s
 from repro.pim.graph import (DEFAULT_ROW_BUDGET, BulkGraph, FusedSchedule,
@@ -157,21 +158,31 @@ def stage_rows_queued(arrays: Sequence[jax.Array], *, geom: DrimGeometry,
 
 @functools.lru_cache(maxsize=256)
 def _queued_runner(programs, result_rows, n_rows, mesh, donate,
-                   body_engine="queued"):
+                   body_engine="queued", faults=None, bank_geoms=None):
     """Compiled multi-queue executor for one (programs, readbacks, mesh,
-    body engine) signature: every queue's stream is a separate
+    body engine, faults) signature: every queue's stream is a separate
     specialization of the shared `scheduler.wave_fn` body — trace-time
     unrolled for "queued", the Pallas interpreter for "pallas" — issued
     in ONE jitted computation so XLA schedules the queues concurrently:
     N independent program counters, one dispatch.  `donate=True` hands
     every staged payload to XLA for in-place output reuse (same
-    condition as the resident engine's wave runner)."""
+    condition as the resident engine's wave runner).
+
+    faults: None, or one `FaultModel` per queue (hardening may protect
+    different op ranges per queue); `bank_geoms[q]` = (bank_lo,
+    banks_total) anchors queue q's payload at its physical banks so its
+    flips match the SIMD engines'."""
+    per_q_faults = faults if faults is not None else (None,) * len(programs)
+    per_q_geoms = (bank_geoms if bank_geoms is not None
+                   else (None,) * len(programs))
+
     def body(*staged_qs):
         TRACE_COUNTS["wave_body_queued"] += 1
         return tuple(
-            jax.lax.map(wave_fn(body_engine, prog, rr, nr), st)
-            for prog, rr, nr, st in zip(programs, result_rows, n_rows,
-                                        staged_qs))
+            jax.lax.map(wave_fn(body_engine, prog, rr, nr, fm, bg), st)
+            for prog, rr, nr, fm, bg, st in zip(programs, result_rows,
+                                                n_rows, per_q_faults,
+                                                per_q_geoms, staged_qs))
 
     fn = body
     if mesh is not None:
@@ -186,7 +197,8 @@ def run_waves_queued(staged_qs: Sequence[jax.Array],
                      programs: Sequence[Sequence[AAP]],
                      result_rows: Sequence[Tuple[int, ...]],
                      n_rows: Sequence[int], *, mesh=None,
-                     body_engine: str = "queued") -> Tuple[jax.Array, ...]:
+                     body_engine: str = "queued", faults=None,
+                     bank_geoms=None) -> Tuple[jax.Array, ...]:
     """Execute one wave payload per bank queue, each under its own
     program stream and program counter, in one traced computation.
 
@@ -211,10 +223,28 @@ def run_waves_queued(staged_qs: Sequence[jax.Array],
         # memo + per-queue accounting only; the unrolled engine never
         # reads the encoded stream, so don't materialize it
         encoded_program(p, queue=qid, materialize=False)
+    if faults is not None:
+        if isinstance(faults, FaultModel):
+            faults = (faults,) * len(progs)
+        faults = tuple(fm.wave_model() if fm is not None else None
+                       for fm in faults)
+        if not any(faults):
+            faults = None
+    if faults is None:
+        bank_geoms = None
+    elif mesh is not None:
+        raise ValueError(
+            "fault injection is not supported under a shard_map mesh "
+            "(see scheduler.run_waves); run faulted queues with "
+            "mesh=None")
+    else:
+        bank_geoms = (tuple(bank_geoms) if bank_geoms is not None
+                      else (None,) * len(progs))
     donate = all(len(rr) == st.shape[1]
                  for rr, st in zip(result_rows, staged_qs))
     runner = _queued_runner(progs, tuple(tuple(r) for r in result_rows),
-                            tuple(n_rows), mesh, donate, body_engine)
+                            tuple(n_rows), mesh, donate, body_engine,
+                            faults, bank_geoms)
     return runner(*staged_qs)
 
 
@@ -222,20 +252,28 @@ def dispatch_uniform_queued(arrays: Sequence[jax.Array],
                             program: Sequence[AAP],
                             result_rows: Tuple[int, ...], *, n_rows: int,
                             geom: DrimGeometry, mesh=None,
-                            n_queues: Optional[int] = None,
+                            n_queues: Optional[int] = None, faults=None,
                             ) -> Tuple[jax.Array, int, int]:
     """`scheduler.dispatch_waves` backend for engine="queued": stage the
     payload once, split the bank axis into queue blocks, run every
     queue's (here identical) stream through the MIMD runner, and merge
     the readbacks bank-wise — bit-identical tile order to the SIMD
-    engines by construction."""
+    engines by construction.  Under a `FaultModel` every queue anchors
+    its flip draws at its physical bank offset, so the merged readback
+    stays bit-identical to the faulted SIMD engines too (dead-queue
+    entries only apply to partitioned graphs and are ignored here)."""
     nq = resolve_n_queues(geom, n_queues)
     qmesh = queue_mesh(geom, nq, mesh)
     staged_qs, tiles, waves = stage_rows_queued(arrays, geom=geom,
                                                 n_queues=nq, mesh=qmesh)
+    bank_geoms = None
+    if faults is not None and faults.wave_model() is not None:
+        bank_geoms = tuple((lo, geom.banks)
+                           for lo, hi in bank_blocks(geom.banks, nq))
     outs = run_waves_queued(staged_qs, (tuple(program),) * nq,
                             (result_rows,) * nq, (n_rows,) * nq,
-                            mesh=qmesh)
+                            mesh=qmesh, faults=faults,
+                            bank_geoms=bank_geoms)
     return jnp.concatenate(outs, axis=3), tiles, waves
 
 
@@ -496,11 +534,51 @@ def execute_partitioned(graph: BulkGraph, feeds: Dict[str, jax.Array], *,
     return results, low.schedule
 
 
+@dataclasses.dataclass(frozen=True)
+class ChaosReport:
+    """What one partitioned run survived: which queues died, who
+    detected it, what got requeued where, and how long the recovery
+    path (detect -> replan -> re-dispatch) took in wall-clock."""
+
+    dead_queues: Tuple[int, ...]
+    survivors: Tuple[int, ...]
+    detected_stages: Tuple[int, ...]   # fence stages that found a gap
+    requeued_segments: int
+    recovery_s: float
+    data_parallel: int                 # survivor fleet's elastic_plan
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.dead_queues)
+
+
+class QueueProgressTable:
+    """Per-queue fence-stage progress — the in-process analogue of
+    `runtime.ft.HeartbeatMonitor`'s host table.  Every queue that
+    retires a segment beats (part, stage); the fence barrier then asks
+    which expected queues went silent.  A dead queue never beats, so
+    detection is structural, not timeout-based: the fence IS the
+    deadline."""
+
+    def __init__(self, n_queues: int) -> None:
+        self.n_queues = n_queues
+        self._beats: Dict[int, set] = {}
+
+    def beat(self, part: int, stage: int) -> None:
+        self._beats.setdefault(stage, set()).add(part)
+
+    def missing(self, stage: int, expected) -> Tuple[int, ...]:
+        return tuple(sorted(set(expected)
+                            - self._beats.get(stage, set())))
+
+
 def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
                          gp: GraphPartition, geom: DrimGeometry,
                          n_bits: int, mesh=None,
-                         body_engine: str = "queued",
-                         ) -> Tuple[Dict[str, jax.Array], QueueSchedule]:
+                         body_engine: str = "queued", faults=None,
+                         protected_nodes: FrozenSet[int] = frozenset(),
+                         ) -> Tuple[Dict[str, jax.Array], QueueSchedule,
+                                    Optional[ChaosReport]]:
     """Run ONE BulkGraph split ACROSS the bank queues (true MIMD) — the
     pipeline backend behind `lower(partition=...)`.
 
@@ -523,27 +601,78 @@ def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
     `body_engine` picks each queue's wave body: "queued" (trace-time
     unrolled lax) or "pallas" (the on-device stream interpreter).
 
-    Returns ({output_name: array}, QueueSchedule).
+    faults: optional `core.FaultModel`.  Bit-flip injection anchors
+    each segment at its queue's physical bank block (hardened voter /
+    parity spans mapped per segment through `protected_nodes`, indices
+    into `graph.nodes`); `faults.dead_queues` kills those queues
+    mid-graph — their segments never execute or beat, the fence's
+    progress table detects the gap, the survivor fleet is validated
+    through `runtime.ft.elastic_plan` and the orphaned segments are
+    requeued round-robin on survivor bank blocks.  Because the executor
+    is functional over `env`, a requeued segment is EXACT, not
+    approximate — graceful degradation costs latency only.
+
+    Returns ({output_name: array}, QueueSchedule, ChaosReport | None).
     """
+    from repro.runtime.ft import elastic_plan
+
     nq = gp.n_parts
     n_words = next(iter(env.values())).shape[0] if env else 0
     geom_q = dataclasses.replace(geom, banks=geom.banks // nq)
     qmesh = queue_mesh(geom, nq, mesh)
     tiles = _ceil_div(n_bits, geom.row_bits)
     waves = _ceil_div(tiles, geom_q.n_subarrays)
+    blocks = bank_blocks(geom.banks, nq)
 
-    for stage in range(gp.n_stages):
-        segs = [s for s in gp.segments if s.stage == stage]
+    flips = faults.wave_model() if faults is not None else None
+    # queue -> first fence stage it is dead at ("mid-graph": earlier
+    # stages completed normally, this one and everything after are lost)
+    death_stage: Dict[int, int] = {}
+    if faults is not None:
+        for q, s in faults.dead_queues:
+            if 0 <= q < nq:
+                death_stage[q] = min(s, death_stage.get(q, s))
+    dead = tuple(sorted(death_stage))
+    survivors = tuple(q for q in range(nq) if q not in death_stage)
+    if dead and not survivors:
+        raise RuntimeError(f"all {nq} queues are dead; no survivor can "
+                           "adopt the orphaned segments")
+
+    def seg_faults(s: QueueSegment, epoch: int):
+        fm = flips
+        if epoch:
+            # A recovery dispatch is a LATER command window on the
+            # adopting queue's banks, so its analog draws are
+            # independent of the segments that bank ran at the fence.
+            # Without this epoch salt a requeued segment would replay
+            # the survivor's (op_index, slot) flip stream verbatim —
+            # correlated failures that can out-vote TMR replicas, a
+            # physically meaningless artifact of the counter hash.
+            fm = dataclasses.replace(
+                fm, seed=(fm.seed ^ (epoch * 0x9E3779B9)) & 0xFFFFFFFF)
+        # Subgraphs contain no copies, so subgraph node k IS original
+        # node s.node_ids[k]; protected spans follow that mapping.
+        prot = [k for i, lo, hi in s.fp.node_spans
+                if s.node_ids[i] in protected_nodes
+                for k in range(lo, hi)]
+        return fm.with_protected(prot) if prot else fm
+
+    def run_segs(segs: List[QueueSegment], parts: Sequence[int],
+                 epoch: int = 0) -> None:
         staged_qs: List[jax.Array] = []
         for s in segs:
             st, _, _ = stage_rows([env[n] for n in s.fp.loaded_inputs],
                                   geom=geom_q, mesh=qmesh)
             staged_qs.append(st)
+        per_faults = (tuple(seg_faults(s, epoch) for s in segs)
+                      if flips is not None else None)
+        geoms = (tuple((blocks[p][0], geom.banks) for p in parts)
+                 if flips is not None else None)
         outs = run_waves_queued(
             staged_qs, [s.fp.program for s in segs],
             [s.fp.readback_rows for s in segs],
             [s.fp.template_rows for s in segs], mesh=qmesh,
-            body_engine=body_engine)
+            body_engine=body_engine, faults=per_faults, bank_geoms=geoms)
         for s, out in zip(segs, outs):
             col = {row: i for i, row in enumerate(s.fp.readback_rows)}
             for name, row in s.fp.device_outputs:
@@ -551,7 +680,48 @@ def _execute_partitioned(graph: BulkGraph, env: Dict[str, jax.Array], *,
             for name, src in s.fp.alias_outputs:
                 env[name] = env[src]
 
+    progress = QueueProgressTable(nq)
+    detected: List[int] = []
+    requeued = 0
+    recovery_s = 0.0
+    plan_data = len(survivors) if survivors else nq
+
+    for stage in range(gp.n_stages):
+        segs = [s for s in gp.segments if s.stage == stage]
+        healthy = [s for s in segs
+                   if death_stage.get(s.part, gp.n_stages) > stage]
+        orphans = [s for s in segs
+                   if death_stage.get(s.part, gp.n_stages) <= stage]
+        if healthy:
+            run_segs(healthy, [s.part for s in healthy])
+            for s in healthy:
+                progress.beat(s.part, stage)
+        missing = progress.missing(stage, {s.part for s in segs})
+        if missing:
+            # Fence barrier found silent queues: replan on the survivor
+            # fleet and adopt their segments.  Orphans are padded up to
+            # a survivor multiple so the validated elastic split is
+            # exact (ft.elastic_plan rejects ragged assignments).
+            t0 = time.perf_counter()
+            detected.append(stage)
+            padded = -(-len(orphans) // len(survivors)) * len(survivors)
+            plan = elastic_plan(len(survivors), 1, padded,
+                                model_parallel=1)
+            plan_data = plan["data"]
+            run_segs(orphans, [survivors[i % len(survivors)]
+                               for i in range(len(orphans))],
+                     epoch=stage + 1)
+            requeued += len(orphans)
+            recovery_s += time.perf_counter() - t0
+
     results = {name: env[src] for name, src in gp.output_sources}
     sched = partitioned_queue_schedule(gp, n_bits=n_bits, geom=geom,
                                        tiles=tiles, waves=waves)
-    return results, sched
+    chaos = None
+    if dead:
+        chaos = ChaosReport(dead_queues=dead, survivors=survivors,
+                            detected_stages=tuple(detected),
+                            requeued_segments=requeued,
+                            recovery_s=recovery_s,
+                            data_parallel=plan_data)
+    return results, sched, chaos

@@ -59,9 +59,11 @@ from repro.core import (AAP, DRIM_R, DrimGeometry, encode,
                         microprogram_maj3, microprogram_not,
                         microprogram_xnor2, microprogram_xor2,
                         run_program_unrolled)
-from repro.core.device import (device_load_rows, device_read_rows,
-                               device_run_program, make_device)
+from repro.core.device import (_device_run_program, device_load_rows,
+                               device_read_rows, device_run_program,
+                               make_device)
 from repro.core.energy import E_AAP_NJ_PER_KB
+from repro.core.faults import mix32, slot_ids_grid
 from repro.core.subarray import N_XROWS, WORD_BITS
 
 # Per-slot row layout: operands at word-lines [0, arity), results at the
@@ -305,7 +307,8 @@ ENGINES = ("resident", "baseline", "queued", "pallas")
 
 
 def wave_fn(engine: str, program: Tuple[AAP, ...],
-            result_rows: Tuple[int, ...], n_rows: int):
+            result_rows: Tuple[int, ...], n_rows: int,
+            faults=None, bank_geom=None):
     """The per-wave function every engine shares — ONE code path.
 
     Returns `one_wave(tiles)` mapping one wave's staged tile block
@@ -329,12 +332,23 @@ def wave_fn(engine: str, program: Tuple[AAP, ...],
     All tile shapes are static under trace, so the engine split costs
     nothing at runtime; the differential suites hold the engines
     bit-identical.
+
+    faults: optional `core.faults.FaultModel` — every engine draws its
+    seed-deterministic DRA/TRA flips from the same (seed, op-index,
+    global-slot) counters, so the differential suites keep holding even
+    with injection ON.  `bank_geom` = (bank_lo, banks_total) anchors a
+    per-bank queue's payload at its physical bank offset so the queued
+    engine reproduces the SIMD engines' flips exactly.
     """
+    if faults is not None:
+        faults = faults.wave_model()
+    bank_lo, banks_total = bank_geom if bank_geom is not None else (0, None)
     if engine == "pallas":
         # Lazy import: the scheduler must not pull Pallas in at import
         # time for the lax-only engines.
         from repro.kernels.aap_interpreter import pallas_wave_fn
-        return pallas_wave_fn(program, result_rows, n_rows)
+        return pallas_wave_fn(program, result_rows, n_rows,
+                              faults=faults, bank_geom=bank_geom)
     if engine == "baseline":
         # encode directly: the enclosing runner is already memoized per
         # program, and the op-name `encoded_program` cache would only
@@ -346,14 +360,24 @@ def wave_fn(engine: str, program: Tuple[AAP, ...],
             dev0 = make_device(chips=c, banks=b, subarrays=s,
                                n_data=n_rows - N_XROWS, row_bits=w * 32)
             dev = device_load_rows(dev0, 0, jnp.moveaxis(tiles, 0, 3))
-            out = device_run_program(dev, encoded)
+            out = _device_run_program(dev, encoded, faults,
+                                      bank_lo=bank_lo,
+                                      banks_total=banks_total)
             return device_read_rows(out, result_rows)
     else:
         def one_wave(tiles: jax.Array) -> jax.Array:
             zeros = jnp.zeros(tiles.shape[1:], jnp.uint32)
             rows = {wl: tiles[wl] for wl in range(tiles.shape[0])}
+            slot_hash = None
+            if faults is not None:
+                c, b, s, _ = tiles.shape[1:]
+                grid = slot_ids_grid(c, b, s, bank_lo=bank_lo,
+                                     banks_total=banks_total)
+                slot_hash = mix32(grid ^ jnp.uint32(faults.seed))[..., None]
             rows, dcc = run_program_unrolled(program, rows, {},
-                                             n_rows=n_rows, zeros=zeros)
+                                             n_rows=n_rows, zeros=zeros,
+                                             faults=faults,
+                                             slot_hash=slot_hash)
             return jnp.stack([rows.get(r, zeros) for r in result_rows])
     return one_wave
 
@@ -361,16 +385,18 @@ def wave_fn(engine: str, program: Tuple[AAP, ...],
 @functools.lru_cache(maxsize=512)
 def _wave_runner(engine: str, program: Tuple[AAP, ...],
                  result_rows: Tuple[int, ...], n_rows: int, mesh,
-                 donate: bool):
-    """Compiled wave executor for one (engine, program, readback, mesh)
-    signature: a single `lax.map` of the shared `wave_fn` body over the
-    wave axis.  With a mesh, the body runs under `shard_map` over
-    (chips, banks) with no collectives; `donate=True` hands the staged
-    buffer to XLA for output reuse."""
+                 donate: bool, faults=None, bank_geom=None):
+    """Compiled wave executor for one (engine, program, readback, mesh,
+    faults) signature: a single `lax.map` of the shared `wave_fn` body
+    over the wave axis.  With a mesh, the body runs under `shard_map`
+    over (chips, banks) with no collectives; `donate=True` hands the
+    staged buffer to XLA for output reuse.  A `FaultModel` is frozen/
+    hashable, so faulted builds cache alongside the clean ones."""
     def body(staged: jax.Array) -> jax.Array:
         TRACE_COUNTS["wave_body" if engine != "baseline"
                      else "wave_body_baseline"] += 1
-        return jax.lax.map(wave_fn(engine, program, result_rows, n_rows),
+        return jax.lax.map(wave_fn(engine, program, result_rows, n_rows,
+                                   faults, bank_geom),
                            staged)
 
     fn = body
@@ -383,7 +409,8 @@ def _wave_runner(engine: str, program: Tuple[AAP, ...],
 
 def run_waves(staged: jax.Array, program: Sequence[AAP],
               result_rows: Tuple[int, ...], *, n_rows: int,
-              mesh=None, engine: str = "resident") -> jax.Array:
+              mesh=None, engine: str = "resident",
+              faults=None, bank_geom=None) -> jax.Array:
     """Execute every wave of a staged payload in ONE traced computation.
 
     staged: [waves, n_rows_in, chips, banks, subarrays, row_words] —
@@ -405,11 +432,21 @@ def run_waves(staged: jax.Array, program: Sequence[AAP],
 
     Returns [waves, len(result_rows), chips, banks, subarrays, row_words].
     """
+    if faults is not None:
+        faults = faults.wave_model()
+    if faults is None:
+        bank_geom = None
+    elif mesh is not None:
+        raise ValueError(
+            "fault injection is not supported under a shard_map mesh: "
+            "global slot ids are not visible inside a shard, so flips "
+            "could not stay identical to the unsharded engines; run "
+            "faulted programs with mesh=None")
     donate = engine != "baseline" and len(result_rows) == staged.shape[1]
     if engine == "baseline":
         mesh = None
     runner = _wave_runner(engine, tuple(program), tuple(result_rows),
-                          n_rows, mesh, donate)
+                          n_rows, mesh, donate, faults, bank_geom)
     return runner(staged)
 
 
@@ -462,7 +499,7 @@ def stage_rows(arrays: Sequence[jax.Array], *, geom: DrimGeometry,
 def dispatch_waves(engine: str, arrays: Sequence[jax.Array],
                    program: Sequence[AAP], result_rows: Tuple[int, ...],
                    *, n_rows: int, geom: DrimGeometry, mesh=None,
-                   n_queues: int | None = None,
+                   n_queues: int | None = None, faults=None,
                    ) -> Tuple[jax.Array, int, int]:
     """ONE dispatch point for all the wave engines: engine-specific
     staging, shared wave body (`wave_fn`).
@@ -489,7 +526,8 @@ def dispatch_waves(engine: str, arrays: Sequence[jax.Array],
         raise ValueError(f"engine {engine!r} is a comparator, not a "
                          "device wave engine")
     return eng.dispatch(arrays, program, result_rows, n_rows=n_rows,
-                        geom=geom, mesh=mesh, n_queues=n_queues)
+                        geom=geom, mesh=mesh, n_queues=n_queues,
+                        faults=faults)
 
 
 def execute(op: str, *operands: jax.Array, geom: DrimGeometry = DRIM_R,

@@ -46,13 +46,17 @@ class HeartbeatMonitor:
         self.host_id = host_id
         self.straggler_factor = straggler_factor
         self.dead_after_s = dead_after_s
-        self._last_beat = time.time()
+        # None until the first beat: construction time is NOT a step
+        # boundary, so the first record must not report the (arbitrary)
+        # construct-to-beat gap as a step latency — a slow-to-start
+        # host would look like a straggler before running a step.
+        self._last_beat: Optional[float] = None
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
 
     def beat(self, step: int) -> None:
         now = time.time()
-        rec = {"host": self.host_id, "step": step, "t": now,
-               "lat": now - self._last_beat}
+        lat = 0.0 if self._last_beat is None else now - self._last_beat
+        rec = {"host": self.host_id, "step": step, "t": now, "lat": lat}
         self._last_beat = now
         with open(self.path, "a") as f:
             f.write(json.dumps(rec) + "\n")
@@ -86,6 +90,29 @@ class HeartbeatMonitor:
                 if now - h.last_seen > self.dead_after_s]
         return stragglers, dead
 
+    def prune(self, now: Optional[float] = None) -> List[int]:
+        """Drop dead hosts' records from the table file (atomic rewrite,
+        same tmp+rename discipline as checkpoint.py) so a long-running
+        coordinator is not forever re-reading beats of evicted hosts.
+        Returns the pruned host ids."""
+        _, dead = self.report(now)
+        if not dead or not os.path.exists(self.path):
+            return []
+        gone = set(dead)
+        kept = []
+        for line in open(self.path):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn write — drop it with the dead
+            if r["host"] not in gone:
+                kept.append(line)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.writelines(kept)
+        os.replace(tmp, self.path)
+        return sorted(gone)
+
 
 def elastic_plan(n_alive_hosts: int, devices_per_host: int,
                  global_batch: int, model_parallel: int = 16
@@ -95,11 +122,27 @@ def elastic_plan(n_alive_hosts: int, devices_per_host: int,
     model_parallel is held fixed (param shards must fit); the data axis
     shrinks to the largest divisor of the alive device count, and the
     per-host batch grows to keep the global batch constant.
+
+    The global batch must split evenly over the survivors: silently
+    flooring `global_batch / n_alive_hosts` (the old behavior) would
+    shrink the effective batch and quietly change training semantics
+    after every resize — exactly the class of bug an elastic restore
+    must never introduce.
     """
+    if n_alive_hosts < 1 or devices_per_host < 1:
+        raise ValueError("need at least one alive host with one device")
     n_dev = n_alive_hosts * devices_per_host
     if n_dev % model_parallel:
         raise ValueError(f"{n_dev} devices not divisible by TP="
                          f"{model_parallel}")
+    if global_batch % n_alive_hosts:
+        fit = max(d for d in range(1, n_alive_hosts + 1)
+                  if global_batch % d == 0)
+        raise ValueError(
+            f"global batch {global_batch} does not split over "
+            f"{n_alive_hosts} hosts; flooring would drop "
+            f"{global_batch % n_alive_hosts} samples per step — resize "
+            f"the fleet to {fit} hosts or repad the batch")
     data = n_dev // model_parallel
     while global_batch % data:
         data -= 1  # shrink until the batch divides (keeps step semantics)

@@ -1,0 +1,163 @@
+"""Chaos suite for the elastic queue fleet (`pim.queue`).
+
+A partitioned BulkGraph runs MIMD across per-bank command queues; this
+suite kills queues mid-graph through `FaultModel.dead_queues` and holds
+the executor to the ISSUE acceptance bar: the fence-stage progress
+table detects the silent queues, the survivor fleet is validated via
+`runtime.ft.elastic_plan`, the orphaned segments are requeued on
+survivor bank blocks, and the final outputs are EXACT — graceful
+degradation costs recovery latency only, never correctness.  The
+`ChaosReport` carries the evidence (who died, who detected, what was
+requeued, how long recovery took); combined runs stack dead queues on
+top of bit flips and TMR hardening to show the whole robustness story
+composes.
+"""
+import numpy as np
+import pytest
+
+import drim
+from drim import FaultModel
+from repro.pim import graph_ref_results
+from repro.pim.bnn import bnn_dot_graph_carrysave
+from repro.pim.queue import QueueProgressTable
+
+N_WORDS = 24
+
+
+@pytest.fixture(scope="module")
+def bnn_case():
+    graph, nbits = bnn_dot_graph_carrysave(4)
+    rng = np.random.default_rng(3)
+    feeds = {n: (np.zeros(N_WORDS, np.uint32) if n == "zero"
+                 else rng.integers(0, 1 << 32, N_WORDS, dtype=np.uint32))
+             for n in graph.input_names}
+    return graph, feeds, graph_ref_results(graph, feeds)
+
+
+def _lower(graph, geom, **kw):
+    return drim.compile(graph, geom=geom).lower(partition=True,
+                                                n_queues=4, **kw)
+
+
+def _assert_exact(outs, ref):
+    for name in ref:
+        np.testing.assert_array_equal(np.asarray(outs[name]), ref[name],
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Mid-graph queue death -> detect, replan, requeue, exact results
+# ---------------------------------------------------------------------------
+
+def test_clean_partitioned_run_has_no_report(small_geom, bnn_case):
+    graph, feeds, ref = bnn_case
+    low = _lower(graph, small_geom)
+    _assert_exact(low.run(feeds), ref)
+    assert low.chaos_report is None
+
+
+def test_stage0_kill_detected_and_requeued(small_geom, bnn_case):
+    graph, feeds, ref = bnn_case
+    low = _lower(graph, small_geom)
+    outs = low.run(feeds, faults=FaultModel(dead_queues=(2,)))
+    _assert_exact(outs, ref)
+    rep = low.chaos_report
+    assert rep is not None and rep.degraded
+    assert rep.dead_queues == (2,)
+    assert rep.survivors == (0, 1, 3)
+    assert rep.detected_stages and rep.detected_stages[0] == 0
+    assert rep.requeued_segments >= 1
+    assert rep.recovery_s > 0.0
+    assert rep.data_parallel == len(rep.survivors)
+
+
+def test_mid_graph_kill_preserves_earlier_stages(small_geom, bnn_case):
+    """A queue dead from a LATER fence stage completed its early
+    segments normally; only work at/after the death stage is adopted.
+    Either way the outputs stay exact."""
+    graph, feeds, ref = bnn_case
+    low = _lower(graph, small_geom)
+    n_stages = low.gp.n_stages
+    assert n_stages > 1
+    outs = low.run(feeds, faults=FaultModel(dead_queues=((0, 1),)))
+    _assert_exact(outs, ref)
+    rep = low.chaos_report
+    assert rep.dead_queues == (0,) and rep.survivors == (1, 2, 3)
+    assert all(s >= 1 for s in rep.detected_stages)
+    # a queue with no segments at its death stage orphans nothing
+    assert rep.requeued_segments == len(
+        [s for s in low.gp.segments if s.part == 0 and s.stage >= 1])
+
+
+def test_two_dead_queues_still_exact(small_geom, bnn_case):
+    graph, feeds, ref = bnn_case
+    low = _lower(graph, small_geom)
+    outs = low.run(feeds, faults=FaultModel(dead_queues=(1, 3)))
+    _assert_exact(outs, ref)
+    rep = low.chaos_report
+    assert rep.dead_queues == (1, 3) and rep.survivors == (0, 2)
+    assert rep.data_parallel == 2
+
+
+def test_all_queues_dead_raises(small_geom, bnn_case):
+    graph, feeds, _ = bnn_case
+    low = _lower(graph, small_geom)
+    with pytest.raises(RuntimeError, match="no survivor"):
+        low.run(feeds, faults=FaultModel(dead_queues=(0, 1, 2, 3)))
+
+
+def test_out_of_range_queue_id_is_inert(small_geom, bnn_case):
+    """Killing a queue the partition does not have (e.g. a model built
+    for a bigger fleet) degrades nothing."""
+    graph, feeds, ref = bnn_case
+    low = _lower(graph, small_geom)
+    _assert_exact(low.run(feeds, faults=FaultModel(dead_queues=(9,))),
+                  ref)
+    assert low.chaos_report is None
+
+
+# ---------------------------------------------------------------------------
+# Chaos composes with bit flips and hardening
+# ---------------------------------------------------------------------------
+
+def test_kill_plus_flips_deterministic(small_geom, bnn_case):
+    """Dead queues and bit flips stack: the requeued segments draw the
+    SURVIVOR's physical flips, and the whole run stays seed-exact."""
+    graph, feeds, ref = bnn_case
+    fm = FaultModel(p_dra=0.25, p_tra=0.35, seed=5, dead_queues=(2,))
+    low = _lower(graph, small_geom)
+    o1 = {k: np.asarray(v) for k, v in low.run(feeds, faults=fm).items()}
+    assert low.chaos_report is not None
+    o2 = {k: np.asarray(v) for k, v in low.run(feeds, faults=fm).items()}
+    for name in o1:
+        np.testing.assert_array_equal(o1[name], o2[name])
+    corrupted = sum(int(np.unpackbits(
+        (o1[n] ^ ref[n]).view(np.uint8)).sum()) for n in ref)
+    assert corrupted > 0
+
+
+def test_kill_plus_corner_plus_tmr_exact(small_geom, bnn_case):
+    """The full robustness stack: ±15% corner flips + a dead queue +
+    TMR voting -> detection, requeue, AND bit-exact outputs."""
+    graph, feeds, ref = bnn_case
+    fm = FaultModel.from_corner(0.15, source="paper", seed=0,
+                                dead_queues=(1,))
+    low = _lower(graph, small_geom, harden="tmr", faults=fm)
+    _assert_exact(low.run(feeds), ref)
+    rep = low.chaos_report
+    assert rep is not None and rep.dead_queues == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Progress table unit behavior
+# ---------------------------------------------------------------------------
+
+def test_progress_table_detects_silent_queues():
+    t = QueueProgressTable(4)
+    t.beat(0, 0)
+    t.beat(3, 0)
+    assert t.missing(0, {0, 1, 3}) == (1,)
+    assert t.missing(0, {0, 3}) == ()
+    assert t.missing(1, {2}) == (2,)  # never beat at stage 1
+    t.beat(2, 1)
+    assert t.missing(1, {2}) == ()

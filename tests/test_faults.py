@@ -1,0 +1,243 @@
+"""Differential suite for Table-3 fault injection (`core.faults`).
+
+The fault injector's contract is determinism, not statistics: whether
+an op instance fails and which bit it flips is a counter-based hash of
+(seed, op_index, global sub-array slot), so every engine — resident,
+baseline scan, queued MIMD, Pallas stream interpreter — must draw the
+IDENTICAL flip for the same op on the same physical sub-array.  That
+keeps the differential methodology alive *under* injected faults: the
+engines are compared bit-for-bit against each other while all of them
+disagree with the clean oracle.  The suite pins that identity on single
+ops and fused graphs, the zero-overhead-off guarantee (an inactive
+model is literally the fault-free path), seed separation, stuck-at
+rows, guard-banded op suppression, the queued engine's bank-slice
+anchoring, and the sharding/comparator guard rails.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import drim
+from drim import FaultModel
+from repro.core.analog import PAPER_TABLE3
+from repro.core.faults import mix32
+from repro.pim import graph_ref_results
+from repro.pim.bnn import bnn_dot_graph_carrysave
+
+# Hot, far beyond Table 3: with 64 sub-array slots even a one-AAP
+# program flips many bits, so "corrupts" assertions never flake.
+HOT = FaultModel(p_dra=0.25, p_tra=0.35, seed=3)
+
+DEVICE_ENGINES = ("resident", "baseline", "queued", "pallas")
+
+
+def _bits(a, b):
+    """Hamming distance between two uint32 arrays."""
+    diff = (np.asarray(a, np.uint32) ^ np.asarray(b, np.uint32))
+    return int(np.unpackbits(diff.view(np.uint8)).sum())
+
+
+def _operands(n_words, seed=7):
+    rng = np.random.default_rng(seed)
+    return tuple(rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+                 for _ in range(2))
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine flip identity
+# ---------------------------------------------------------------------------
+
+def test_op_flip_identity_all_engines(small_geom):
+    """Same (seed, op, slot) -> same flip on every device engine; the
+    shared faulted result differs from the clean oracle."""
+    n_words = small_geom.n_subarrays * (small_geom.row_bits // 32) + 3
+    a, b = _operands(n_words)
+    clean = ~(a ^ b)
+    outs = {}
+    for eng in DEVICE_ENGINES:
+        low = drim.compile("xnor2", geom=small_geom).lower(
+            eng, faults=HOT)
+        (res,) = low.run(a, b)
+        outs[eng] = np.asarray(res)
+    for eng in DEVICE_ENGINES[1:]:
+        np.testing.assert_array_equal(outs[eng], outs["resident"],
+                                      err_msg=f"{eng} != resident")
+    assert _bits(outs["resident"], clean) > 0
+
+
+def test_graph_flip_identity_all_engines(small_geom):
+    """The fused BNN carry-save dot, faulted, is bit-identical across
+    all four engines and corrupted versus the numpy oracle."""
+    graph, nbits = bnn_dot_graph_carrysave(4)
+    rng = np.random.default_rng(1)
+    n_words = small_geom.n_subarrays * (small_geom.row_bits // 32)
+    feeds = {n: (np.zeros(n_words, np.uint32) if n == "zero"
+                 else rng.integers(0, 1 << 32, n_words, dtype=np.uint32))
+             for n in graph.input_names}
+    ref = graph_ref_results(graph, feeds)
+    outs = {}
+    for eng in DEVICE_ENGINES:
+        low = drim.compile(graph, geom=small_geom).lower(eng, faults=HOT)
+        outs[eng] = {k: np.asarray(v) for k, v in low.run(feeds).items()}
+    corrupted = sum(_bits(outs["resident"][f"c{i}"], ref[f"c{i}"])
+                    for i in range(nbits))
+    assert corrupted > 0
+    for eng in DEVICE_ENGINES[1:]:
+        for name in ref:
+            np.testing.assert_array_equal(
+                outs[eng][name], outs["resident"][name],
+                err_msg=f"{eng}:{name} != resident")
+
+
+def test_queued_bank_anchoring(small_geom):
+    """A queue operating on a bank slice draws the flips of its
+    PHYSICAL bank position: the queued engine matches the resident
+    full-fleet dispatch for every queue count."""
+    a, b = _operands(41, seed=11)
+    low_r = drim.compile("xnor2", geom=small_geom).lower(
+        "resident", faults=HOT)
+    (want,) = low_r.run(a, b)
+    for nq in (1, 2, 4):
+        low_q = drim.compile("xnor2", geom=small_geom).lower(
+            "queued", n_queues=nq, faults=HOT)
+        (got,) = low_q.run(a, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"n_queues={nq}")
+
+
+# ---------------------------------------------------------------------------
+# Determinism / zero overhead off
+# ---------------------------------------------------------------------------
+
+def test_flips_deterministic_across_runs_and_lowerings(small_geom):
+    a, b = _operands(19, seed=2)
+    low = drim.compile("xnor2", geom=small_geom).lower(
+        "resident", faults=HOT)
+    (r1,) = low.run(a, b)
+    (r2,) = low.run(a, b)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    # a FRESH lowering of the same (program, geom, faults) agrees too
+    low2 = drim.compile("xnor2", geom=small_geom).lower("resident")
+    (r3,) = low2.run(a, b, faults=HOT)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r3))
+
+
+def test_seed_separates_streams(small_geom):
+    a, b = _operands(19, seed=2)
+    low = drim.compile("xnor2", geom=small_geom).lower("resident")
+    (r1,) = low.run(a, b, faults=HOT)
+    (r2,) = low.run(a, b, faults=dataclasses.replace(HOT, seed=4))
+    assert _bits(r1, r2) > 0
+
+
+def test_inactive_model_is_clean_path(small_geom):
+    """faults=None and an all-zero FaultModel are byte-identical to the
+    clean run — the off switch costs nothing and changes nothing."""
+    a, b = _operands(23, seed=5)
+    clean = ~(a ^ b)
+    for eng in ("resident", "queued"):
+        low = drim.compile("xnor2", geom=small_geom).lower(eng)
+        (r0,) = low.run(a, b)
+        (r1,) = low.run(a, b, faults=FaultModel())
+        np.testing.assert_array_equal(np.asarray(r0), clean)
+        np.testing.assert_array_equal(np.asarray(r1), clean)
+    assert FaultModel().wave_model() is None
+    assert not FaultModel().active
+
+
+def test_wave_model_strips_dispatcher_concerns():
+    """dead_queues is a dispatcher concern: the wave body's model drops
+    it; a model that is ONLY dead queues drops to None entirely."""
+    m = FaultModel(p_dra=0.1, dead_queues=((1, 0),))
+    wm = m.wave_model()
+    assert wm is not None and wm.dead_queues == ()
+    assert wm.p_dra == m.p_dra
+    assert FaultModel(dead_queues=(2,)).wave_model() is None
+    assert FaultModel(dead_queues=(2,)).active
+
+
+# ---------------------------------------------------------------------------
+# Stuck rows + protected ops
+# ---------------------------------------------------------------------------
+
+def test_stuck_result_row_forces_constant(small_geom):
+    """Sticking the xnor2 result word-line at 1 makes the readback
+    all-ones on every engine; a word-line beyond the template is inert."""
+    a, b = _operands(17, seed=6)
+    ones = np.full(17, 0xFFFFFFFF, np.uint32)
+    for eng in DEVICE_ENGINES:
+        low = drim.compile("xnor2", geom=small_geom).lower(eng)
+        (res,) = low.run(a, b, faults=FaultModel(stuck_rows=((2, 1),)))
+        np.testing.assert_array_equal(np.asarray(res), ones,
+                                      err_msg=eng)
+        (res,) = low.run(a, b, faults=FaultModel(stuck_rows=((500, 0),)))
+        np.testing.assert_array_equal(np.asarray(res), ~(a ^ b),
+                                      err_msg=f"{eng} inert row")
+
+
+def test_protected_ops_suppress_all_flips(small_geom):
+    """Protecting every op index of the program (guard-banded sense
+    amps) recovers the clean result even at the hot corner."""
+    a, b = _operands(29, seed=8)
+    low = drim.compile("xnor2", geom=small_geom).lower("resident")
+    guarded = HOT.with_protected(range(low.aaps))
+    (res,) = low.run(a, b, faults=guarded)
+    np.testing.assert_array_equal(np.asarray(res), ~(a ^ b))
+
+
+# ---------------------------------------------------------------------------
+# Guard rails + model construction
+# ---------------------------------------------------------------------------
+
+def test_mesh_plus_faults_rejected(small_geom):
+    mesh = drim.fleet_mesh(small_geom)
+    with pytest.raises(ValueError, match="unsharded"):
+        drim.compile("xnor2", geom=small_geom).lower(
+            "resident", mesh=mesh, faults=HOT)
+    low = drim.compile("xnor2", geom=small_geom).lower(
+        "resident", mesh=mesh)
+    a, b = _operands(9)
+    with pytest.raises(ValueError, match="unsharded"):
+        low.run(a, b, faults=HOT)
+
+
+def test_comparator_ignores_faults(small_geom):
+    """The tpu comparator is the clean oracle — faults never apply."""
+    a, b = _operands(13, seed=4)
+    low = drim.compile("xnor2", geom=small_geom).lower("tpu", faults=HOT)
+    (res,) = low.run(a, b)
+    np.testing.assert_array_equal(np.asarray(res), ~(a ^ b))
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="p_dra"):
+        FaultModel(p_dra=1.5)
+    with pytest.raises(ValueError, match="0 or 1"):
+        FaultModel(stuck_rows=((3, 2),))
+    with pytest.raises(TypeError, match="FaultModel"):
+        drim.compile("xnor2").lower("resident", faults="hot")
+    # bare dead-queue ids normalize to (queue, stage 0)
+    assert FaultModel(dead_queues=(2, (1, 3))).dead_queues \
+        == ((2, 0), (1, 3))
+    assert FaultModel(protected_ops=(3, 1, 3)).protected_ops == (1, 3)
+
+
+def test_from_corner_sources():
+    paper = FaultModel.from_corner(0.10, source="paper", seed=5)
+    assert paper.seed == 5
+    assert paper.p_dra == PAPER_TABLE3[0.10]["DRA"] / 100.0
+    assert paper.p_tra == PAPER_TABLE3[0.10]["TRA"] / 100.0
+    with pytest.raises(ValueError, match="Table-3 corner"):
+        FaultModel.from_corner(0.17, source="paper")
+    with pytest.raises(ValueError, match="unknown source"):
+        FaultModel.from_corner(0.15, source="oracle")
+
+
+def test_mix32_is_a_bijection_sample():
+    """Spot-check the hash core: uint32 in, uint32 out, no collisions
+    over a contiguous sample (the finalizer is invertible)."""
+    xs = np.arange(4096, dtype=np.uint32)
+    ys = np.asarray(mix32(xs))
+    assert ys.dtype == np.uint32
+    assert len(np.unique(ys)) == len(xs)

@@ -1,0 +1,193 @@
+"""ECC / majority-vote hardening (`pim.harden`) — the ISSUE acceptance
+suite.
+
+The load-bearing claim: at the paper's ±15% process-variation corner
+the UNHARDENED BNN carry-save dot corrupts (Table 3 says some DRAs and
+TRAs latch wrong), while the SAME graph lowered with `harden="tmr"`
+stays bit-exact against the numpy oracle and `harden="ecc"` flags the
+corruption through its parity row — with the redundancy priced as real
+AAPs in `cost()`/`verdict()`, never free.  Structure tests pin the
+rewrites themselves (3x + voters for TMR, dual chain + parity fold for
+ECC, protected node sets non-empty), and guard-rail tests pin the
+reserved parity name and the op-source restriction.
+"""
+import numpy as np
+import pytest
+
+import drim
+from drim import FaultModel, harden_graph
+from repro.pim import graph_ref_results
+from repro.pim.bnn import bnn_dot_graph_carrysave
+from repro.pim.harden import ECC_OUTPUT
+
+N_WORDS = 32
+
+
+@pytest.fixture(scope="module")
+def corner():
+    """The calibrated simulator's ±15% corner (Monte-Carlo rates)."""
+    return FaultModel.from_corner(0.15, source="sim", seed=0)
+
+
+@pytest.fixture(scope="module")
+def bnn_case():
+    graph, nbits = bnn_dot_graph_carrysave(4)
+    rng = np.random.default_rng(1)
+    feeds = {n: (np.zeros(N_WORDS, np.uint32) if n == "zero"
+                 else rng.integers(0, 1 << 32, N_WORDS, dtype=np.uint32))
+             for n in graph.input_names}
+    return graph, nbits, feeds, graph_ref_results(graph, feeds)
+
+
+def _corrupted_bits(outs, ref):
+    total = 0
+    for name in ref:
+        diff = (np.asarray(outs[name], np.uint32)
+                ^ np.asarray(ref[name], np.uint32))
+        total += int(np.unpackbits(diff.view(np.uint8)).sum())
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Rewrite structure
+# ---------------------------------------------------------------------------
+
+def test_tmr_structure():
+    graph, _ = bnn_dot_graph_carrysave(3)
+    g2, prot = harden_graph(graph, "tmr")
+    emitting = [n for n in graph.nodes if n[0] != "copy"]
+    results = sum(len(n[2]) for n in emitting)
+    assert len(g2.nodes) == 3 * len(emitting) + results
+    voters = [i for i, n in enumerate(g2.nodes) if n[0] == "maj3"]
+    assert prot == frozenset(voters) and prot
+    assert set(g2.outputs) == set(graph.outputs)
+    assert graph_ref_results(g2, _zero_feeds(g2)).keys() \
+        == graph.outputs.keys()
+
+
+def test_ecc_structure():
+    graph, nbits = bnn_dot_graph_carrysave(3)
+    g2, prot = harden_graph(graph, "ecc")
+    emitting = [n for n in graph.nodes if n[0] != "copy"]
+    # dual chains + (n_outputs - 1) parity xor folds
+    assert len(g2.nodes) == 2 * len(emitting) + (nbits - 1)
+    assert ECC_OUTPUT in g2.outputs
+    folds = [i for i, n in enumerate(g2.nodes) if n[0] == "xor2"
+             and i >= 2 * len(emitting)]
+    assert prot == frozenset(folds)
+    # clean semantics: primary outputs == oracle, parity == xor of them
+    feeds = _rand_feeds(g2, seed=9)
+    ref = graph_ref_results(graph, {k: feeds[k]
+                                    for k in graph.input_names})
+    got = graph_ref_results(g2, feeds)
+    acc = np.zeros(8, np.uint32)
+    for name in ref:
+        np.testing.assert_array_equal(got[name], ref[name])
+        acc = acc ^ got[name]
+    np.testing.assert_array_equal(got[ECC_OUTPUT], acc)
+
+
+def _zero_feeds(g, n=8):
+    return {name: np.zeros(n, np.uint32) for name in g.input_names}
+
+
+def _rand_feeds(g, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {name: (np.zeros(n, np.uint32) if name == "zero"
+                   else rng.integers(0, 1 << 32, n, dtype=np.uint32))
+            for name in g.input_names}
+
+
+def test_harden_guard_rails():
+    graph, _ = bnn_dot_graph_carrysave(2)
+    with pytest.raises(ValueError, match="unknown harden scheme"):
+        harden_graph(graph, "dmr")
+    g = drim.BulkGraph()
+    a = g.input("a")
+    g.output(ECC_OUTPUT, g.op("not", a))
+    with pytest.raises(ValueError, match="reserved"):
+        harden_graph(g, "ecc")
+    with pytest.raises(ValueError, match="graph source"):
+        drim.compile("xnor2").lower("resident", harden="tmr")
+
+
+# ---------------------------------------------------------------------------
+# The acceptance corner: bare corrupts, TMR corrects, ECC detects
+# ---------------------------------------------------------------------------
+
+def test_bare_corrupts_at_corner(small_geom, bnn_case, corner):
+    graph, _, feeds, ref = bnn_case
+    low = drim.compile(graph, geom=small_geom).lower("resident")
+    outs = low.run(feeds, faults=corner)
+    assert _corrupted_bits(outs, ref) > 0
+
+
+def test_tmr_bit_exact_at_corner(small_geom, bnn_case, corner):
+    graph, _, feeds, ref = bnn_case
+    low = drim.compile(graph, geom=small_geom).lower(
+        "resident", harden="tmr", faults=corner)
+    outs = low.run(feeds)
+    assert _corrupted_bits(outs, ref) == 0
+
+
+def test_ecc_detects_at_corner(small_geom, bnn_case, corner):
+    graph, _, feeds, ref = bnn_case
+    low = drim.compile(graph, geom=small_geom).lower(
+        "resident", harden="ecc")
+    # clean run: exact outputs, clean parity, no parity row leaked
+    outs = low.run(feeds)
+    assert ECC_OUTPUT not in outs
+    assert _corrupted_bits(outs, ref) == 0
+    assert low.last_ecc is not None
+    assert low.last_ecc.mismatch_bits == 0 and not low.last_ecc.corrupted
+    assert low.last_ecc.words == N_WORDS
+    # corner run: the parity diff flags the flips
+    low.run(feeds, faults=corner)
+    assert low.last_ecc.corrupted and low.last_ecc.mismatch_bits > 0
+
+
+def test_tmr_ecc_composes(small_geom, bnn_case, corner):
+    """tmr+ecc: voted (so exact) AND a clean end-to-end parity receipt
+    — the detector wraps corrected chains, so it stays silent."""
+    graph, _, feeds, ref = bnn_case
+    low = drim.compile(graph, geom=small_geom).lower(
+        "resident", harden="tmr+ecc", faults=corner)
+    outs = low.run(feeds)
+    assert _corrupted_bits(outs, ref) == 0
+    assert low.last_ecc is not None and low.last_ecc.mismatch_bits == 0
+
+
+def test_harden_under_queued_engine(small_geom, bnn_case, corner):
+    """The redundancy is ordinary program text: the queued engine runs
+    the same hardened stream to the same exact result."""
+    graph, _, feeds, ref = bnn_case
+    low = drim.compile(graph, geom=small_geom).lower(
+        "queued", n_queues=2, harden="tmr", faults=corner)
+    outs = low.run(feeds)
+    assert _corrupted_bits(outs, ref) == 0
+
+
+# ---------------------------------------------------------------------------
+# Redundancy is priced
+# ---------------------------------------------------------------------------
+
+def test_hardening_costs_aaps_and_labels_verdict(small_geom, bnn_case):
+    graph, _, feeds, ref = bnn_case
+    n_bits = N_WORDS * 32
+    lows = {scheme: drim.compile(graph, geom=small_geom).lower(
+                "resident", harden=scheme)
+            for scheme in (None, "ecc", "tmr")}
+    aaps = {s: low.cost(n_bits).aaps_sequential
+            for s, low in lows.items()}
+    assert aaps[None] < aaps["ecc"] < aaps["tmr"]
+    v_bare = lows[None].verdict(n_bits)
+    v_tmr = lows["tmr"].verdict(n_bits)
+    assert v_tmr.workload.endswith("+tmr")
+    assert not v_bare.workload.endswith("+tmr")
+    row = {r.contender: r for r in v_tmr.rows}["DRIM-fused"]
+    bare_row = {r.contender: r for r in v_bare.rows}["DRIM-fused"]
+    assert row.aaps > bare_row.aaps
+    # cost() and run() agree on the hardened stream too
+    outs = lows["tmr"].run(feeds)
+    assert _corrupted_bits(outs, ref) == 0
+    assert lows["tmr"].schedule == lows["tmr"].cost(n_bits)

@@ -16,7 +16,8 @@ from repro.data.pipeline import (MemmapLM, Prefetcher, SyntheticLM,
                                  attach_modality_stub, host_batch_slice)
 from repro.optim.compress import (compress_grad, compress_tree,
                                   decompress_tree, init_errors)
-from repro.runtime.ft import HeartbeatMonitor, elastic_plan
+from repro.runtime.ft import (HeartbeatMonitor, elastic_plan,
+                              run_with_restarts)
 from repro.runtime import sharding as shd
 from jax.sharding import PartitionSpec as P
 
@@ -145,6 +146,81 @@ def test_elastic_plan_shrinks_data_axis():
     assert plan["model"] == 2
     assert plan["data"] == 6 and 24 % plan["data"] == 0
     assert plan["per_host_batch"] == 8
+
+
+def test_elastic_plan_rejects_ragged_batch():
+    """A global batch that does not split over the survivors must be a
+    loud error naming the largest fleet that fits — silently flooring
+    the per-host batch would change training semantics on resize."""
+    with pytest.raises(ValueError, match="resize the fleet to 6 hosts"):
+        elastic_plan(n_alive_hosts=7, devices_per_host=1,
+                     global_batch=24, model_parallel=1)
+    with pytest.raises(ValueError, match="at least one alive host"):
+        elastic_plan(n_alive_hosts=0, devices_per_host=1,
+                     global_batch=24, model_parallel=1)
+    with pytest.raises(ValueError, match="not divisible by TP"):
+        elastic_plan(n_alive_hosts=3, devices_per_host=1,
+                     global_batch=24, model_parallel=2)
+
+
+def test_heartbeat_first_beat_reports_zero_latency(tmp_path):
+    """Construct-to-beat gap is NOT a step latency: a slow-to-start
+    host must not look like a straggler before running a step."""
+    path = str(tmp_path / "hb.jsonl")
+    h = HeartbeatMonitor(path, host_id=0)
+    h._last_beat = None
+    h.beat(0)
+    assert h.table()[0].step_latency == 0.0
+    h.beat(1)
+    assert h.table()[0].step_latency >= 0.0
+
+
+def test_heartbeat_table_skips_torn_writes(tmp_path):
+    path = str(tmp_path / "hb.jsonl")
+    h = HeartbeatMonitor(path, host_id=0)
+    h.beat(3)
+    h.beat(4)
+    with open(path, "a") as f:
+        f.write('{"host": 1, "step": 5, "t"')  # host died mid-write
+    tab = h.table()
+    assert set(tab) == {0} and tab[0].last_step == 4
+
+
+def test_heartbeat_prune_drops_dead_hosts(tmp_path):
+    path = str(tmp_path / "hb.jsonl")
+    h0 = HeartbeatMonitor(path, host_id=0, dead_after_s=10.0)
+    h1 = HeartbeatMonitor(path, host_id=1, dead_after_s=10.0)
+    h0.beat(1)
+    h1.beat(1)
+    with open(path, "a") as f:
+        f.write("{torn")  # dying host's partial record rides along
+    now = max(h.last_seen for h in h0.table().values())
+    # within the deadline nothing is pruned (torn line included: it is
+    # only dropped once a rewrite actually happens)
+    assert h0.prune(now=now + 9.0) == []
+    assert set(h0.table()) == {0, 1}
+    # past the deadline both hosts are dead: table rewritten atomically
+    assert h0.prune(now=now + 1000.0) == [0, 1]
+    assert h0.table() == {} and os.path.exists(path)
+
+
+def test_run_with_restarts_recovers_then_exhausts():
+    calls = []
+
+    def flaky(start):
+        calls.append(start)
+        if len(calls) < 3:
+            raise RuntimeError("host crash")
+        return 42
+
+    assert run_with_restarts(flaky, max_restarts=3) == 42
+    assert calls == [None, None, None]
+
+    def always_down(start):
+        raise RuntimeError("rack on fire")
+
+    with pytest.raises(RuntimeError, match="rack on fire"):
+        run_with_restarts(always_down, max_restarts=2)
 
 
 # --- data pipeline --------------------------------------------------------------

@@ -277,3 +277,84 @@ def test_forced_8device_serve_cli_subprocess():
         stats = json.loads(proc.stdout.strip().splitlines()[-1])
         ids[engine] = stats["sample_ids"]
     assert ids["tpu"] == ids["resident"]
+
+
+# --- graceful degradation (--resilient) --------------------------------------
+
+def _fake_decode_factory(fail_plan):
+    """make_fn stand-in: `fail_plan[engine]` is the number of times a
+    decode step on that engine raises before succeeding."""
+    calls = {"made": []}
+
+    def make_fn(cfg, ctx_len, temperature, engine, n_queues):
+        calls["made"].append(engine)
+        remaining = {"n": fail_plan.get(engine, 0)}
+
+        def dec(*args):
+            if remaining["n"] > 0:
+                remaining["n"] -= 1
+                raise RuntimeError(f"{engine} queue wedged")
+            return ("tok", engine)
+
+        return dec
+
+    return make_fn, calls
+
+
+def test_resilient_decode_retries_then_recovers():
+    """Transient failures are absorbed by backoff retries on the SAME
+    engine, each logged as an incident; the engine never changes."""
+    naps = []
+    make_fn, calls = _fake_decode_factory({"resident": 2})
+    dec, state, incidents = serve.make_resilient_decode(
+        None, 16, 0.0, "resident", None, max_retries=2,
+        backoff_s=0.01, sleep=naps.append, make_fn=make_fn)
+    assert dec() == ("tok", "resident")
+    assert state["engine"] == "resident" and calls["made"] == ["resident"]
+    assert [i["action"] for i in incidents] \
+        == ["retry(backoff=0.01s)", "retry(backoff=0.02s)"]
+    assert naps == [0.01, 0.02]
+    assert all(i["engine"] == "resident" and "queue wedged" in i["error"]
+               for i in incidents)
+    # recovered: further steps are clean and append nothing
+    assert dec() == ("tok", "resident") and len(incidents) == 2
+
+
+def test_resilient_decode_falls_back_to_tpu():
+    """Retries exhausted on a wedged DRIM engine -> rebuild on the tpu
+    comparator and keep serving; the incident log shows the handover."""
+    make_fn, calls = _fake_decode_factory({"queued": 99})
+    dec, state, incidents = serve.make_resilient_decode(
+        None, 16, 0.0, "queued", 4, max_retries=1, backoff_s=0.0,
+        sleep=lambda s: None, make_fn=make_fn)
+    assert dec() == ("tok", "tpu")
+    assert state["engine"] == "tpu"
+    assert calls["made"] == ["queued", "tpu"]
+    assert [i["action"] for i in incidents] \
+        == ["retry(backoff=0s)", "fallback:tpu"]
+
+
+def test_resilient_decode_aborts_when_tpu_dies():
+    """The oracle fallback failing too is unrecoverable: re-raise, with
+    the full incident trail preserved for the operator."""
+    make_fn, _ = _fake_decode_factory({"resident": 99, "tpu": 99})
+    dec, state, incidents = serve.make_resilient_decode(
+        None, 16, 0.0, "resident", None, max_retries=1, backoff_s=0.0,
+        sleep=lambda s: None, make_fn=make_fn)
+    with pytest.raises(RuntimeError, match="tpu queue wedged"):
+        dec()
+    assert [i["action"] for i in incidents] \
+        == ["retry(backoff=0s)", "fallback:tpu", "retry(backoff=0s)",
+            "abort"]
+    assert state["engine"] == "tpu"
+
+
+def test_resilient_serve_end_to_end(tpu_run):
+    """--resilient on a healthy engine is a no-op for tokens: same
+    greedy stream, zero incidents, stats carry the resilience fields."""
+    gen_t, _ = tpu_run
+    gen_r, stats = _serve("--engine", "resident", "--resilient")
+    np.testing.assert_array_equal(gen_r, gen_t)
+    assert stats["requested_engine"] == "resident"
+    assert stats["engine"] == "resident"
+    assert stats["incidents"] == []
