@@ -153,6 +153,9 @@ def _queue_kill(csv_rows, graph, feeds, ref, seed: int, trials: int):
     print(f"degraded run     {degraded_s * 1e3:>9.1f} ms")
     print(f"recovery path    {rep.recovery_s * 1e3:>9.1f} ms  "
           f"(detect -> elastic_plan -> requeue x{rep.requeued_segments})")
+    print(f"recompile        {rep.compile_s * 1e3:>9.1f} ms  "
+          "(XLA re-lower of the requeued segments, split out of "
+          "recovery)")
     print(f"survivors        {rep.survivors} (data_parallel="
           f"{rep.data_parallel})")
     record.add("chaos", experiment="queue_kill", seed=seed,
@@ -164,6 +167,7 @@ def _queue_kill(csv_rows, graph, feeds, ref, seed: int, trials: int):
                requeued_segments=rep.requeued_segments,
                clean_wall_s=clean_s, degraded_wall_s=degraded_s,
                recovery_wall_s=rep.recovery_s,
+               recovery_compile_s=rep.compile_s,
                data_parallel=rep.data_parallel)
     csv_rows.append(("fig_chaos_queue_kill", degraded_s * 1e6,
                      f"recovery_ms={rep.recovery_s * 1e3:.1f}"))

@@ -41,15 +41,25 @@ def clear(bench: str | None = None) -> None:
 
 def flush(out_dir: str = ".") -> List[str]:
     """Write BENCH_<bench>.json for every bench with records; returns
-    the written paths (records stay buffered until `clear()`)."""
+    the written paths (records stay buffered until `clear()`).
+
+    When telemetry is armed (``benchmarks.run --telemetry`` or
+    ``DRIM_TELEMETRY=1``) every file additionally carries the shared
+    ``"telemetry"`` key — one registry snapshot taken at flush time, so
+    cache hit rates / fault counts / chaos gauges ride the same record
+    the perf numbers do."""
+    from repro.runtime import telemetry
     paths = []
     if _RECORDS:
         os.makedirs(out_dir, exist_ok=True)
+    snap = telemetry.snapshot() if telemetry.enabled() else None
     for bench, records in sorted(_RECORDS.items()):
         path = os.path.join(out_dir, f"BENCH_{bench}.json")
+        doc = {"bench": bench, "records": records}
+        if snap is not None:
+            doc["telemetry"] = snap
         with open(path, "w") as f:
-            json.dump({"bench": bench, "records": records}, f, indent=1,
-                      default=str)
+            json.dump(doc, f, indent=1, default=str)
             f.write("\n")
         paths.append(path)
     return paths

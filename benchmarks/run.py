@@ -81,7 +81,18 @@ def main(argv=None) -> None:
                     help="directory for BENCH_*.json records")
     ap.add_argument("--list", action="store_true",
                     help="list benchmark names and exit")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="arm the DRIM telemetry registry + span tracer; "
+                    "every BENCH_*.json gains a 'telemetry' snapshot key")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                    "to PATH (implies --telemetry)")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        args.telemetry = True
+    if args.telemetry:
+        from repro.runtime import telemetry
+        telemetry.arm()
 
     if args.list:
         for name, _ in MODULES:
@@ -116,6 +127,10 @@ def main(argv=None) -> None:
 
     for path in record.flush(args.json_dir):
         print(f"wrote {path}")
+
+    if args.trace_out:
+        from repro.runtime import telemetry
+        print(f"wrote {telemetry.export_trace(args.trace_out)}")
 
     if failures:
         print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)

@@ -19,6 +19,11 @@ engine, mesh, queue count, and partition strategy:
 This package is the stable import surface; the implementation lives in
 `repro.pim.frontend` (tracing), `repro.pim.compiler` (pipeline + engine
 registry) and `repro.pim.offload` (the unified placement Verdict).
+
+Observability rides along as `drim.obs` (= `repro.runtime.telemetry`):
+`drim.obs.armed()` turns on span tracing + per-queue Perfetto
+timelines, `drim.obs.snapshot()` reads the metrics registry, and
+`drim.obs.export_trace(path)` dumps a chrome://tracing-compatible file.
 """
 from repro.core import DRIM_R, DRIM_S, DrimGeometry, FaultModel
 from repro.pim.compiler import (ENGINE_REGISTRY, PARTITIONERS,
@@ -34,6 +39,7 @@ from repro.pim.mesh import fleet_mesh
 from repro.pim.offload import (TpuCost, Verdict, VerdictRow, build_verdict,
                                tpu_cost)
 from repro.pim.queue import ChaosReport
+from repro.runtime import telemetry as obs
 
 __all__ = [
     "BitTensor", "BulkGraph", "ChaosReport", "Compiled", "DRIM_R",
@@ -42,6 +48,6 @@ __all__ = [
     "Lowered", "PARTITIONERS", "PASS_PIPELINE", "TpuCost", "TraceError",
     "TracedProgram", "Verdict", "VerdictRow", "build_verdict", "compile",
     "copy", "csa_reduce", "engines", "fleet_mesh", "full_add",
-    "get_engine", "harden_graph", "jit", "lower", "maj", "popcount",
-    "select", "tpu_cost", "xnor",
+    "get_engine", "harden_graph", "jit", "lower", "maj", "obs",
+    "popcount", "select", "tpu_cost", "xnor",
 ]

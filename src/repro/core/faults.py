@@ -199,6 +199,26 @@ class FaultModel:
     def tra_thresh(self) -> int:
         return _thresh(self.p_tra)
 
+    # -- observability ------------------------------------------------------
+    def count_faultable(self, program) -> "dict":
+        """Host-side census of the armed fault sites in an AAP program:
+        how many DRA / TRA instances can draw flips under this model
+        (zero-probability op kinds and `protected_ops` indices do not
+        count).  The telemetry registry books these per engine at wave-
+        body build time — actual flips are data-independent hash draws
+        on device and are not observable host-side without readback."""
+        from .isa import OP_DRA, OP_TRA
+        prot = set(self.protected_ops)
+        dra = tra = 0
+        for i, ins in enumerate(program):
+            if i in prot:
+                continue
+            if ins.op == OP_DRA and self.p_dra:
+                dra += 1
+            elif ins.op == OP_TRA and self.p_tra:
+                tra += 1
+        return {"dra": dra, "tra": tra}
+
     # -- derivation helpers -------------------------------------------------
     def with_protected(self, ops) -> "FaultModel":
         """A copy with `ops` added to the protected op-index set."""

@@ -36,6 +36,7 @@ import numpy as np
 from repro.models import (decode_step, decode_step_eager, empty_caches,
                           prefill)
 from repro.models.layers import serving_engine
+from repro.runtime import telemetry
 
 
 def make_decode_fn(cfg, ctx_len: int, temperature: float = 0.0,
@@ -236,9 +237,12 @@ class WaveBatcher:
             tok = jnp.asarray(self._slot_last, jnp.int32)[:, None]
             pos = jnp.asarray(self._slot_pos, jnp.int32)
             self._key, sub = jax.random.split(self._key)
-            nxt, self.caches = self._decode(self.params, tok, self.caches,
-                                            pos, sub)
-            nxt = np.asarray(nxt).reshape(-1)
+            with telemetry.span("batch:wave", cat="serve", tid="serve",
+                                wave=self.wave, n_active=len(active),
+                                admitted=len(admitted)):
+                nxt, self.caches = self._decode(self.params, tok,
+                                                self.caches, pos, sub)
+                nxt = np.asarray(nxt).reshape(-1)
             for s in active:
                 rid = self._slot_rid[s]
                 self.results[rid].append(int(nxt[s]))

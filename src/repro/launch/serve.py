@@ -42,6 +42,7 @@ from repro.launch.batching import WaveBatcher, make_decode_fn
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import (decode_step, empty_caches, init_params, prefill)
 from repro.models.layers import pack_bitlinear
+from repro.runtime import telemetry
 
 # config-geometry override flags -> ModelConfig fields (0 = keep)
 _CFG_OVERRIDES = (("layers", "n_layers"), ("d_model", "d_model"),
@@ -86,6 +87,13 @@ def parse_args(argv=None) -> argparse.Namespace:
                     help="wrap the decode fn in retry-with-backoff and "
                     "a TPU-engine fallback; incidents land in the "
                     "stats record instead of killing the server")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="arm the observability layer: span tracing "
+                    "through lowering/decode, registry snapshot folded "
+                    "into the stats record under 'telemetry'")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Chrome-trace/Perfetto JSON here "
+                    "after the run (implies --telemetry)")
     for flag, _field in _CFG_OVERRIDES:
         ap.add_argument(f"--{flag.replace('_', '-')}", type=int,
                         default=0, help=argparse.SUPPRESS)
@@ -178,9 +186,16 @@ def make_resilient_decode(cfg, ctx_len: int, temperature: float,
     server rebuilds the decode fn on the "tpu" comparator engine —
     numerically the oracle the DRIM engines are held bit-identical to,
     so tokens keep flowing at reduced fidelity-of-simulation, not
-    reduced correctness — and keeps serving.  Every failure appends a
-    structured incident record (engine, attempt, error, action) so the
-    operator sees the degradation instead of a dead server.
+    reduced correctness — and keeps serving.
+
+    Every failure appends a STRUCTURED incident record — `t_s`
+    (timestamp on the run clock, seconds since this wrapper was built),
+    `engine`, `attempt`, `retries` (retries already burned on the
+    current engine), `error`, `action`, and for fallbacks a
+    `fallback_reason` — and books it on the telemetry registry
+    (``serve.incident:*`` counters, trace instants when armed), so the
+    operator sees the degradation in the stats record AND in every
+    registry snapshot instead of a dead server.
 
     Returns (decode_fn, state, incidents); `state["engine"]` tracks
     the engine currently serving.  `sleep`/`make_fn` are injectable so
@@ -190,6 +205,13 @@ def make_resilient_decode(cfg, ctx_len: int, temperature: float,
         "engine": engine,
         "fn": make_fn(cfg, ctx_len, temperature, engine, n_queues)}
     incidents: List[Dict[str, Any]] = []
+    clock0 = time.perf_counter()
+
+    def book(rec: Dict[str, Any], kind: str) -> None:
+        rec["action_kind"] = kind
+        incidents.append(rec)
+        telemetry.REGISTRY.counters("serve")[f"incident:{kind}"] += 1
+        telemetry.event("serve:incident", cat="serve", tid="serve", **rec)
 
     def dec(*args):
         attempt, delay = 0, backoff_s
@@ -197,24 +219,29 @@ def make_resilient_decode(cfg, ctx_len: int, temperature: float,
             try:
                 return state["fn"](*args)
             except Exception as e:  # noqa: BLE001 — any engine failure
-                rec = {"engine": state["engine"], "attempt": attempt,
+                rec = {"t_s": round(time.perf_counter() - clock0, 6),
+                       "engine": state["engine"], "attempt": attempt,
+                       "retries": attempt,
                        "error": f"{type(e).__name__}: {e}"[:200]}
                 attempt += 1
                 if attempt <= max_retries:
                     rec["action"] = f"retry(backoff={delay:g}s)"
-                    incidents.append(rec)
+                    book(rec, "retry")
                     sleep(delay)
                     delay *= 2
                 elif state["engine"] != "tpu":
                     rec["action"] = "fallback:tpu"
-                    incidents.append(rec)
+                    rec["fallback_reason"] = (
+                        f"retries exhausted on engine "
+                        f"{state['engine']!r} ({max_retries} retries)")
+                    book(rec, "fallback")
                     state["engine"] = "tpu"
                     state["fn"] = make_fn(cfg, ctx_len, temperature,
                                           "tpu", n_queues)
                     attempt, delay = 0, backoff_s
                 else:
                     rec["action"] = "abort"
-                    incidents.append(rec)
+                    book(rec, "abort")
                     raise
 
     return dec, state, incidents
@@ -300,9 +327,12 @@ def run_serve(args) -> Tuple[np.ndarray, Dict[str, Any]]:
         for i in range(args.gen - 1):
             pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
             t1 = time.time()
-            tok, caches = dec(params, tok, caches, pos,
-                              jax.random.fold_in(key, 100 + i))
-            jax.block_until_ready(tok)
+            with telemetry.span("decode:token", cat="serve", tid="serve",
+                                token=i, engine=eng_state["engine"],
+                                batch=args.batch):
+                tok, caches = dec(params, tok, caches, pos,
+                                  jax.random.fold_in(key, 100 + i))
+                jax.block_until_ready(tok)
             step_times.append(time.time() - t1)
             out.append(np.asarray(tok))
 
@@ -323,6 +353,8 @@ def run_serve(args) -> Tuple[np.ndarray, Dict[str, Any]]:
         if args.resilient:
             stats["requested_engine"] = args.engine
             stats["incidents"] = incidents
+        if telemetry.enabled():
+            stats["telemetry"] = telemetry.snapshot()
         return gen, stats
 
 
@@ -454,12 +486,18 @@ def run_continuous(args) -> Tuple[Dict[int, np.ndarray], Dict[str, Any]]:
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.telemetry or args.trace_out:
+        telemetry.arm()
     if args.microbench:
         gen, stats = run_microbench(args)
     elif args.continuous:
         gen, stats = run_continuous(args)
     else:
         gen, stats = run_serve(args)
+    if telemetry.enabled() and "telemetry" not in stats:
+        stats["telemetry"] = telemetry.snapshot()
+    if args.trace_out:
+        stats["trace_out"] = telemetry.export_trace(args.trace_out)
     print(json.dumps(stats))
     return gen
 

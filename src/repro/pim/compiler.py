@@ -43,6 +43,7 @@ from repro.pim.graph import (DEFAULT_ROW_BUDGET, BulkGraph, FusedProgram,
 from repro.pim.scheduler import (N_DATA_ROWS, OP_ARITY, RESULT_ROWS,
                                  Schedule, _ceil_div, encoded_program,
                                  expected_results)
+from repro.runtime import telemetry
 
 
 def _warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
@@ -127,11 +128,16 @@ def _simd_dispatch(engine_name: str) -> Callable:
     def dispatch(arrays, program, result_rows, *, n_rows, geom,
                  mesh=None, n_queues=None, faults=None):
         from repro.pim.scheduler import run_waves, stage_rows
-        staged, tiles, waves = stage_rows(
-            arrays, geom=geom,
-            mesh=mesh if engine_name == "resident" else None)
-        outs = run_waves(staged, program, result_rows, n_rows=n_rows,
-                         mesh=mesh, engine=engine_name, faults=faults)
+        with telemetry.span("stage", cat="run", tid="run",
+                            engine=engine_name):
+            staged, tiles, waves = stage_rows(
+                arrays, geom=geom,
+                mesh=mesh if engine_name == "resident" else None)
+        with telemetry.span("dispatch", cat="run", tid="run",
+                            engine=engine_name, waves=waves, tiles=tiles,
+                            aaps=len(program)):
+            outs = run_waves(staged, program, result_rows, n_rows=n_rows,
+                             mesh=mesh, engine=engine_name, faults=faults)
         return outs, tiles, waves
     return dispatch
 
@@ -268,8 +274,19 @@ class Compiled:
         st = _LoweringState(compiled=self, engine_name=engine, mesh=mesh,
                             n_queues=n_queues, partition=partition,
                             harden=harden, faults=faults)
-        for p in PASS_PIPELINE:
-            p.fn(st)
+        if telemetry.enabled():
+            with telemetry.span("lower", cat="compiler", tid="compiler",
+                                kind=self.kind, engine=engine or ""):
+                for p in PASS_PIPELINE:
+                    with telemetry.span(f"pass:{p.name}", cat="compiler",
+                                        tid="compiler") as sp:
+                        p.fn(st)
+                        sp.set(nodes=(len(st.graph.nodes)
+                                      if st.graph is not None else 1),
+                               aaps=st.aaps)
+        else:
+            for p in PASS_PIPELINE:
+                p.fn(st)
         return Lowered(
             kind=st.kind, engine=st.engine, geom=self.geom,
             mesh=st.mesh, n_queues=st.n_queues, partition=st.partition,
@@ -562,6 +579,20 @@ class Lowered:
         lowering-time default).  With `harden="ecc"` lowerings the
         detection evidence of each run lands on `self.last_ecc`.
         """
+        if not telemetry.enabled():
+            return self._run(args, n_bits, faults)
+        with telemetry.span("Lowered.run", cat="run", tid="run",
+                            kind=self.kind,
+                            engine=getattr(self.engine, "name", ""),
+                            op=self.op or "", aaps=self.aaps):
+            out = self._run(args, n_bits, faults)
+        if self.kind == "partition":
+            # MIMD runs also drop their simulated-clock queue timeline
+            # (per-queue tracks, fences, contention stalls, chaos).
+            telemetry.record_queue_timeline(self)
+        return out
+
+    def _run(self, args, n_bits, faults):
         faults = self._resolve_faults(faults)
         if self.kind == "op":
             return self._run_op(args, n_bits, faults)
@@ -617,8 +648,9 @@ class Lowered:
             ops, self.program, self.result_rows, n_rows=self.n_rows,
             geom=self.geom, mesh=self.mesh, n_queues=self.n_queues,
             faults=faults)
-        results = tuple(outs[:, i].reshape(-1)[:n_words]
-                        for i in range(len(self.result_rows)))
+        with telemetry.span("readback", cat="run", tid="run", op=self.op):
+            results = tuple(outs[:, i].reshape(-1)[:n_words]
+                            for i in range(len(self.result_rows)))
         self.schedule = self.engine.lift_op(self, n_bits, tiles, waves)
         return results
 
@@ -668,8 +700,10 @@ class Lowered:
                 fp.readback_rows, n_rows=fp.template_rows, geom=geom,
                 mesh=self.mesh, n_queues=self.n_queues, faults=faults)
             col = {row: i for i, row in enumerate(fp.readback_rows)}
-            for name, row in fp.device_outputs:
-                results[name] = outs[:, col[row]].reshape(-1)[:n_words]
+            with telemetry.span("readback", cat="run", tid="run",
+                                outputs=len(fp.device_outputs)):
+                for name, row in fp.device_outputs:
+                    results[name] = outs[:, col[row]].reshape(-1)[:n_words]
         sched = _make_fused_schedule(fp, n_bits, tiles, waves, geom)
         self.schedule = self.engine.lift_graph(self, sched)
         return results
@@ -746,13 +780,16 @@ def lower(src, *, geom: Optional[DrimGeometry] = None,
 _LOWER_CACHE: Dict[Tuple, Lowered] = {}
 
 # Observable from tests/telemetry: a decode loop must pay trace +
-# compile + lower once per kernel shape, never once per token.
-LOWER_CACHE_STATS = {"hits": 0, "misses": 0}
+# compile + lower once per kernel shape, never once per token.  Backed
+# by the registry's "lower_cache" namespace (same Counter object), so
+# `telemetry.snapshot()` and `telemetry.fresh()` see it.
+LOWER_CACHE_STATS = telemetry.REGISTRY.counters("lower_cache")
 
 
 def clear_lower_cache() -> None:
     _LOWER_CACHE.clear()
-    LOWER_CACHE_STATS.update(hits=0, misses=0)
+    # Counter.update(hits=0) ADDS zero — clear() is the reset.
+    LOWER_CACHE_STATS.clear()
 
 
 def lower_cached(src, *, key: Optional[Tuple] = None,

@@ -65,6 +65,7 @@ from repro.core.device import (_device_run_program, device_load_rows,
 from repro.core.energy import E_AAP_NJ_PER_KB
 from repro.core.faults import mix32, slot_ids_grid
 from repro.core.subarray import N_XROWS, WORD_BITS
+from repro.runtime import telemetry
 
 # Per-slot row layout: operands at word-lines [0, arity), results at the
 # word-lines listed here.  8 data rows are plenty for every Table-2 op.
@@ -133,8 +134,11 @@ def build_program(op: str) -> List[AAP]:
 # streams per-bank programs through the same memo); `queue=` tags the
 # hit/miss on that queue's own counters so mixed multi-program streams
 # can be audited per bank queue.  The stats counter exists so tests can
-# assert the hit path is taken.
-ENCODE_CACHE_STATS: collections.Counter = collections.Counter()
+# assert the hit path is taken.  It IS the telemetry registry's
+# "encode_cache" namespace (same Counter object), so one
+# `telemetry.snapshot()` sees it and `telemetry.fresh()` scopes it.
+ENCODE_CACHE_STATS: collections.Counter = \
+    telemetry.REGISTRY.counters("encode_cache")
 # Op-name keys are bounded by the Table-2 op count; program-tuple keys
 # (fused graphs, partition segments) are open-ended, so that side is a
 # bounded LRU — the nightly random-DAG sweeps stream a fresh program
@@ -191,18 +195,20 @@ def fresh_encode_cache():
     first issue of any program is deterministically a miss, repeats are
     hits, and exact assertions hold in any test order (the
     `encode_cache` pytest fixture wraps this).  Yields the (cleared)
-    stats counter."""
-    saved_stats = dict(ENCODE_CACHE_STATS)
+    stats counter.
+
+    The stats side delegates to the telemetry registry (the counter IS
+    the registry's "encode_cache" namespace, restored in place), so
+    this context composes with an enclosing `telemetry.fresh()` instead
+    of maintaining a second save/restore mechanism."""
     saved_ops = dict(_ENCODED_CACHE)
     saved_tuples = collections.OrderedDict(_ENCODED_TUPLE_CACHE)
-    ENCODE_CACHE_STATS.clear()
     _ENCODED_CACHE.clear()
     _ENCODED_TUPLE_CACHE.clear()
     try:
-        yield ENCODE_CACHE_STATS
+        with telemetry.REGISTRY.fresh_namespace("encode_cache") as stats:
+            yield stats
     finally:
-        ENCODE_CACHE_STATS.clear()
-        ENCODE_CACHE_STATS.update(saved_stats)
         _ENCODED_CACHE.clear()
         _ENCODED_CACHE.update(saved_ops)
         _ENCODED_TUPLE_CACHE.clear()
@@ -300,8 +306,10 @@ def plan_schedule(op: str, n_bits: int, *,
 # (geometry, program) signature no matter how many waves execute — the
 # whole wave axis runs under a single `lax.map`, so a 1-wave and a
 # 64-wave payload dispatch the same compiled function.  Tests assert the
-# counter is wave-count independent.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# counter is wave-count independent.  Backed by the telemetry
+# registry's "wave_trace" namespace (same Counter object).
+TRACE_COUNTS: collections.Counter = \
+    telemetry.REGISTRY.counters("wave_trace")
 
 ENGINES = ("resident", "baseline", "queued", "pallas")
 
@@ -392,6 +400,15 @@ def _wave_runner(engine: str, program: Tuple[AAP, ...],
     over (chips, banks) with no collectives; `donate=True` hands the
     staged buffer to XLA for output reuse.  A `FaultModel` is frozen/
     hashable, so faulted builds cache alongside the clean ones."""
+    if faults is not None:
+        # Armed fault-site census, booked once per build (lru_cached
+        # like the trace counts): how many DRA/TRA instances of this
+        # program can draw flips on this engine.
+        for kind, n in faults.count_faultable(program).items():
+            if n:
+                telemetry.REGISTRY.counters("faults")[
+                    f"{engine}:armed_{kind}"] += n
+
     def body(staged: jax.Array) -> jax.Array:
         TRACE_COUNTS["wave_body" if engine != "baseline"
                      else "wave_body_baseline"] += 1

@@ -76,7 +76,10 @@ class HeartbeatMonitor:
 
     def report(self, now: Optional[float] = None
                ) -> Tuple[List[int], List[int]]:
-        """-> (straggler host ids, dead host ids)."""
+        """-> (straggler host ids, dead host ids).  Liveness also lands
+        as telemetry gauges (``ft.alive`` / ``ft.stragglers`` /
+        ``ft.dead``) so fleet health rides every registry snapshot."""
+        from repro.runtime import telemetry
         now = now or time.time()
         tab = self.table()
         if not tab:
@@ -88,6 +91,9 @@ class HeartbeatMonitor:
                       if med and h.step_latency > self.straggler_factor * med]
         dead = [h.host_id for h in tab.values()
                 if now - h.last_seen > self.dead_after_s]
+        telemetry.gauge("ft.alive", len(tab) - len(dead))
+        telemetry.gauge("ft.stragglers", len(stragglers))
+        telemetry.gauge("ft.dead", len(dead))
         return stragglers, dead
 
     def prune(self, now: Optional[float] = None) -> List[int]:
