@@ -232,10 +232,13 @@ def run(csv_rows):
               f"{rps / 1e3:>9.2f}{wall * 1e3:>9.2f}")
 
     # -- acceptance assertions (all through the pipeline) -----------------
-    ripple = drim.compile(bnn_dot_graph(K)).lower().aaps
+    low_ripple = drim.compile(bnn_dot_graph(K)).lower()
     jitted = traced_bnn(K)
-    carrysave = drim.compile(jitted).lower().aaps
-    gp = drim.compile(jitted).lower(partition=True, n_queues=N_QUEUES).gp
+    low_carry = drim.compile(jitted).lower()
+    low_part = drim.compile(jitted).lower(partition=True,
+                                          n_queues=N_QUEUES)
+    ripple, carrysave = low_ripple.aaps, low_carry.aaps
+    gp = low_part.gp
     assert carrysave < ripple, (
         f"traced carry-save tree ({carrysave} AAPs/tile) must beat the "
         f"ripple accumulate ({ripple})")
@@ -253,6 +256,22 @@ def run(csv_rows):
           f"cross-bank rows)")
     print(f"queued/sharded rows/s: {q_rps / s_rps:.2f}x "
           f"(acceptance floor 1x)")
+
+    # -- static-verifier wall-clock (the pass that certified the above) ----
+    reports = [low.verify_report for low in
+               (low_ripple, low_carry, low_part)]
+    if all(r is not None for r in reports):
+        verify_wall = sum(r.wall_s for r in reports)
+        verify_aaps = sum(r.aaps_checked for r in reports)
+        assert all(r.ok for r in reports)
+        record.add(
+            "queue", op=f"bnn_dot[K={K}]", path="static_verify",
+            geometry=_geometry_dict(GEOM), wall_s=verify_wall,
+            aaps_checked=verify_aaps, verify_wall_s=verify_wall)
+        print(f"static verify: {verify_aaps} AAPs over 3 lowerings "
+              f"certified clean in {verify_wall * 1e3:.2f} ms "
+              f"({verify_aaps / max(verify_wall, 1e-9) / 1e3:.0f} "
+              f"kAAP/s)")
 
     # -- closed-form contention + overlap rows ----------------------------
     contended = plan_queued_schedule(

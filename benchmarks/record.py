@@ -15,6 +15,10 @@ Record schema (shared across benches; fields absent where meaningless):
     sim_throughput_bits_s
                   float SIMULATED device throughput from the schedule
     wall_s        float wall-clock seconds per call
+    verified      bool  stamped at flush time: True when the static
+                        verifier pass (`drim.verify`) was on for the
+                        process (the default), so every lowering behind
+                        the number was certified hazard-free
     extra fields  any   bench-specific (waves, tiles, speedups, ...)
 """
 from __future__ import annotations
@@ -48,14 +52,18 @@ def flush(out_dir: str = ".") -> List[str]:
     ``"telemetry"`` key — one registry snapshot taken at flush time, so
     cache hit rates / fault counts / chaos gauges ride the same record
     the perf numbers do."""
+    from repro.pim import verify as _verify
     from repro.runtime import telemetry
     paths = []
     if _RECORDS:
         os.makedirs(out_dir, exist_ok=True)
     snap = telemetry.snapshot() if telemetry.enabled() else None
+    verified = _verify.default_enabled()
     for bench, records in sorted(_RECORDS.items()):
         path = os.path.join(out_dir, f"BENCH_{bench}.json")
-        doc = {"bench": bench, "records": records}
+        stamped = [{**r, "verified": r.get("verified", verified)}
+                   for r in records]
+        doc = {"bench": bench, "records": stamped}
         if snap is not None:
             doc["telemetry"] = snap
         with open(path, "w") as f:

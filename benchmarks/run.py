@@ -37,6 +37,7 @@ CLI and one output format.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -87,7 +88,13 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
                     "to PATH (implies --telemetry)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="turn the static verifier pass off for this run "
+                    "(DRIM_VERIFY=0); BENCH_*.json records are then "
+                    "stamped 'verified': false")
     args = ap.parse_args(argv)
+    if args.no_verify:
+        os.environ["DRIM_VERIFY"] = "0"
     if args.trace_out:
         args.telemetry = True
     if args.telemetry:
@@ -109,6 +116,11 @@ def main(argv=None) -> None:
             ap.error(f"unknown benchmarks: {unknown}")
         names = {r for r in resolved.values()}
         selected = [(n, m) for n, m in MODULES if n in names]
+
+    from repro.pim import verify as _verify
+    print("static verification (drim.verify): "
+          + ("on — every lowering is certified before it is timed"
+             if _verify.default_enabled() else "OFF (--no-verify)"))
 
     csv_rows = []
     failures = []

@@ -39,6 +39,8 @@ from repro.pim.mesh import fleet_mesh
 from repro.pim.offload import (TpuCost, Verdict, VerdictRow, build_verdict,
                                tpu_cost)
 from repro.pim.queue import ChaosReport
+from repro.pim import verify
+from repro.pim.verify import VerifyError, VerifyReport, verify_lowered
 from repro.runtime import telemetry as obs
 
 __all__ = [
@@ -46,8 +48,9 @@ __all__ = [
     "DRIM_S", "DrimGeometry", "ENGINE_REGISTRY", "EccReport", "Engine",
     "EngineRegistry", "FaultModel", "HARDEN_SCHEMES", "JittedFunction",
     "Lowered", "PARTITIONERS", "PASS_PIPELINE", "TpuCost", "TraceError",
-    "TracedProgram", "Verdict", "VerdictRow", "build_verdict", "compile",
-    "copy", "csa_reduce", "engines", "fleet_mesh", "full_add",
-    "get_engine", "harden_graph", "jit", "lower", "maj", "obs",
-    "popcount", "select", "tpu_cost", "xnor",
+    "TracedProgram", "Verdict", "VerdictRow", "VerifyError",
+    "VerifyReport", "build_verdict", "compile", "copy", "csa_reduce",
+    "engines", "fleet_mesh", "full_add", "get_engine", "harden_graph",
+    "jit", "lower", "maj", "obs", "popcount", "select", "tpu_cost",
+    "verify", "verify_lowered", "xnor",
 ]

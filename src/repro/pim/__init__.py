@@ -29,6 +29,9 @@ from .frontend import (BitTensor, JittedFunction, TraceError,
 from .compiler import (ENGINE_REGISTRY, PARTITIONERS, PASS_PIPELINE,
                        Compiled, Engine, EngineRegistry, Lowered, compile,
                        engines, get_engine, lower)
+from . import verify
+from .verify import (VerifyError, VerifyReport, verify_fused,
+                     verify_lowered, verify_partition)
 from .bnn import (bnn_dot_drim, bnn_dot_graph, bnn_dot_graph_carrysave,
                   bnn_dot_partitioned, counter_bits, decode_counts,
                   stage_bnn_planes)

@@ -43,6 +43,7 @@ from repro.pim.graph import (DEFAULT_ROW_BUDGET, BulkGraph, FusedProgram,
 from repro.pim.scheduler import (N_DATA_ROWS, OP_ARITY, RESULT_ROWS,
                                  Schedule, _ceil_div, encoded_program,
                                  expected_results)
+import repro.pim.verify as verify_mod
 from repro.runtime import telemetry
 
 
@@ -251,7 +252,8 @@ class Compiled:
     def lower(self, engine: Optional[str] = None, *, mesh=None,
               n_queues: Optional[int] = None, partition=None,
               harden: Optional[str] = None,
-              faults: Optional[FaultModel] = None) -> "Lowered":
+              faults: Optional[FaultModel] = None,
+              verify: Optional[bool] = None) -> "Lowered":
         """Run the registered pass pipeline and bind an engine.
 
         engine: any `EngineRegistry` name; defaults to "resident"
@@ -270,10 +272,18 @@ class Compiled:
 
         faults: default `core.FaultModel` for every `run()` of this
         lowering (a per-call `run(..., faults=...)` overrides it).
+
+        verify: run the static verifier (`pim.verify`) over the lowered
+        program — AAP-stream hazards, MIMD fence races, harden
+        invariants.  Defaults ON (``DRIM_VERIFY=0`` opts the process
+        out; ``DRIM_VERIFY=1`` forces it back on even over an explicit
+        ``verify=False``).  The report lands on `Lowered.verify_report`;
+        a diagnostic raises `verify.VerifyError` at lower time.
         """
         st = _LoweringState(compiled=self, engine_name=engine, mesh=mesh,
                             n_queues=n_queues, partition=partition,
-                            harden=harden, faults=faults)
+                            harden=harden, faults=faults,
+                            verify=verify_mod.resolve_enabled(verify))
         if telemetry.enabled():
             with telemetry.span("lower", cat="compiler", tid="compiler",
                                 kind=self.kind, engine=engine or ""):
@@ -294,7 +304,8 @@ class Compiled:
             traced=self.traced, fp=st.fp, gp=st.gp, program=st.program,
             result_rows=st.result_rows, n_rows=st.n_rows, aaps=st.aaps,
             harden=st.harden, default_faults=st.faults,
-            protected_nodes=st.protected_nodes)
+            protected_nodes=st.protected_nodes,
+            verify_report=st.verify_report)
 
 
 def compile(src, *, geom: Optional[DrimGeometry] = None,
@@ -350,6 +361,8 @@ class _LoweringState:
     result_rows: Tuple[int, ...] = ()
     n_rows: int = 0
     aaps: int = 0
+    verify: bool = True
+    verify_report: Optional["verify_mod.VerifyReport"] = None
 
 
 def _pass_canonicalize(st: _LoweringState) -> None:
@@ -401,9 +414,7 @@ def _pass_canonicalize(st: _LoweringState) -> None:
         if not isinstance(st.faults, FaultModel):
             raise TypeError("faults= expects a core.FaultModel")
         if st.faults.active and st.mesh is not None:
-            raise ValueError(
-                "fault injection runs unsharded (mesh=None): global "
-                "slot ids are not visible inside a shard_map shard")
+            raise verify_mod.faults_on_mesh_error()
     st.graph = c.graph
     st.kind = c.kind
 
@@ -457,6 +468,18 @@ def _pass_encode(st: _LoweringState) -> None:
     st.result_rows = tuple(st.result_rows)
 
 
+def _pass_verify(st: _LoweringState) -> None:
+    """Static verification of the lowered program (`pim.verify`):
+    AAP-stream hazard analysis over the fused stream, fence
+    happens-before over MIMD partitions, harden structural invariants.
+    On by default; `lower(verify=False)` skips it (unless DRIM_VERIFY=1
+    pins it on).  Raises `verify.VerifyError` on the first diagnostic;
+    the clean report lands on `Lowered.verify_report`."""
+    if not st.verify:
+        return
+    st.verify_report = verify_mod.verify_state(st)
+
+
 @dataclasses.dataclass(frozen=True)
 class Pass:
     name: str
@@ -469,6 +492,7 @@ PASS_PIPELINE: Tuple[Pass, ...] = (
     Pass("fuse", _pass_fuse),
     Pass("partition", _pass_partition),
     Pass("encode", _pass_encode),
+    Pass("verify", _pass_verify),
 )
 
 
@@ -503,7 +527,8 @@ class Lowered:
                  row_budget, op, graph, traced, fp, gp, program,
                  result_rows, n_rows, aaps, harden=None,
                  default_faults=None,
-                 protected_nodes=frozenset()) -> None:
+                 protected_nodes=frozenset(),
+                 verify_report=None) -> None:
         self.kind = kind
         self.engine = engine
         self.geom = geom
@@ -523,6 +548,7 @@ class Lowered:
         self.harden = harden
         self.default_faults = default_faults
         self.protected_nodes = frozenset(protected_nodes)
+        self.verify_report = verify_report   # pim.verify, when enabled
         self.schedule = None          # measured by the last run()
         self.last_ecc = None          # EccReport of the last ecc run()
         self.chaos_report = None      # ChaosReport of the last run()
@@ -543,9 +569,7 @@ class Lowered:
         if not faults.active:
             return None
         if self.mesh is not None:
-            raise ValueError(
-                "fault injection runs unsharded (mesh=None): global "
-                "slot ids are not visible inside a shard_map shard")
+            raise verify_mod.faults_on_mesh_error()
         if self.protected_nodes and self.fp is not None:
             spans = {i: (lo, hi) for i, lo, hi in self.fp.node_spans}
             ops = [k for i in self.protected_nodes
@@ -766,11 +790,12 @@ def lower(src, *, geom: Optional[DrimGeometry] = None,
           n_queues: Optional[int] = None, partition=None,
           harden: Optional[str] = None,
           faults: Optional[FaultModel] = None,
-          row_budget: Optional[int] = DEFAULT_ROW_BUDGET) -> Lowered:
+          row_budget: Optional[int] = DEFAULT_ROW_BUDGET,
+          verify: Optional[bool] = None) -> Lowered:
     """Convenience: `compile(src).lower(...)` in one call."""
     return compile(src, geom=geom, row_budget=row_budget).lower(
         engine=engine, mesh=mesh, n_queues=n_queues, partition=partition,
-        harden=harden, faults=faults)
+        harden=harden, faults=faults, verify=verify)
 
 
 # ---------------------------------------------------------------------------
@@ -798,7 +823,8 @@ def lower_cached(src, *, key: Optional[Tuple] = None,
                  n_queues: Optional[int] = None, partition=None,
                  harden: Optional[str] = None,
                  faults: Optional[FaultModel] = None,
-                 row_budget: Optional[int] = DEFAULT_ROW_BUDGET) -> Lowered:
+                 row_budget: Optional[int] = DEFAULT_ROW_BUDGET,
+                 verify: Optional[bool] = None) -> Lowered:
     """`compile(src).lower(...)` memoized for the LIFE OF THE PROCESS.
 
     This is the serving hot path: `models.layers` routes every BitLinear
@@ -820,14 +846,19 @@ def lower_cached(src, *, key: Optional[Tuple] = None,
         raise TypeError(
             "lower_cached needs a hashable src or an explicit key= "
             "identifying the program") from None
+    # The resolved verify flag keys the memo (not the raw argument):
+    # DRIM_VERIFY may differ between calls, and a verified lowering must
+    # not be handed to a caller who pinned verification on.
+    verify_on = verify_mod.resolve_enabled(verify)
     full_key = (ident, geom, engine, mesh, n_queues, partition,
-                harden, faults, row_budget)
+                harden, faults, row_budget, verify_on)
     low = _LOWER_CACHE.get(full_key)
     if low is None:
         LOWER_CACHE_STATS["misses"] += 1
         low = compile(src, geom=geom, row_budget=row_budget).lower(
             engine=engine, mesh=mesh, n_queues=n_queues,
-            partition=partition, harden=harden, faults=faults)
+            partition=partition, harden=harden, faults=faults,
+            verify=verify_on)
         _LOWER_CACHE[full_key] = low
     else:
         LOWER_CACHE_STATS["hits"] += 1

@@ -454,11 +454,11 @@ def run_waves(staged: jax.Array, program: Sequence[AAP],
     if faults is None:
         bank_geom = None
     elif mesh is not None:
-        raise ValueError(
-            "fault injection is not supported under a shard_map mesh: "
-            "global slot ids are not visible inside a shard, so flips "
-            "could not stay identical to the unsharded engines; run "
-            "faulted programs with mesh=None")
+        # V020_FAULTS_UNSUPPORTED_ON_MESH — the named diagnostic the
+        # verify pass also raises at lower time (lazy import: verify
+        # sits above the scheduler in the module graph).
+        from repro.pim.verify import faults_on_mesh_error
+        raise faults_on_mesh_error()
     donate = engine != "baseline" and len(result_rows) == staged.shape[1]
     if engine == "baseline":
         mesh = None

@@ -245,9 +245,10 @@ def test_traced_bnn_dot_bit_exact(engine, small_geom):
 def test_pipeline_surface(small_geom):
     """compile/lower/run/cost/verdict hang together: cost(n_bits)
     equals the measured schedule, the pass pipeline is the registered
-    5-stage one, and verdicts carry uniform rows."""
+    6-stage one, and verdicts carry uniform rows."""
     assert [p.name for p in PASS_PIPELINE] \
-        == ["canonicalize", "harden", "fuse", "partition", "encode"]
+        == ["canonicalize", "harden", "fuse", "partition", "encode",
+            "verify"]
 
     @drim.jit
     def fn(a, b):

@@ -1,0 +1,468 @@
+"""Mutation-differential tests for `drim.verify` (the static verifier).
+
+Two halves, mirroring how a verifier earns trust:
+
+  1. **Soundness on the real compiler** — every graph the pipeline can
+     produce (fused, partitioned, hardened, and the random-DAG corpus)
+     certifies clean, with the pass on by default.
+  2. **Sensitivity via mutation** — for each diagnostic code, a mutator
+     injects exactly that hazard into an otherwise-clean artifact and
+     the test asserts the verifier reports that exact code.  A verifier
+     that never fires is untested; each mutant here must die.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import drim
+from drim import VerifyError
+from repro.core import FaultModel
+from repro.core.isa import OP_DRA, OP_TRA
+from repro.pim.graph import BulkGraph, compile_graph, partition_graph
+from repro.pim.harden import ECC_OUTPUT, harden_graph
+from repro.pim import verify as V
+from repro.pim.verify import (_origins, verify_fused, verify_harden,
+                              verify_lowered, verify_partition)
+from repro.pim.bnn import bnn_dot_graph
+
+from test_graph import GEOMS, random_graph
+
+
+def codes_of(errors):
+    return {e.code for e in errors}
+
+
+# ---------------------------------------------------------------------------
+# Clean graphs used as mutation substrates
+# ---------------------------------------------------------------------------
+
+def two_independent_xnors():
+    """x = a xnor b, y = c xnor d — two live result rows at end."""
+    g = BulkGraph()
+    a, b, c, d = (g.input(n) for n in "abcd")
+    x = g.op("xnor2", a, b)
+    y = g.op("xnor2", c, d)
+    g.output("x", x)
+    g.output("y", y)
+    return g
+
+
+def chained_xnors():
+    """x = a xnor b (consumes a, b), z = x xnor c."""
+    g = BulkGraph()
+    a, b, c = (g.input(n) for n in "abc")
+    x = g.op("xnor2", a, b)
+    z = g.op("xnor2", x, c)
+    g.output("z", z)
+    return g
+
+
+def shared_operand_xnors():
+    """x and y both read a, b — forces staged x-row copies for node 0."""
+    g = BulkGraph()
+    a, b = g.input("a"), g.input("b")
+    x = g.op("xnor2", a, b)
+    y = g.op("xnor2", a, b)
+    g.output("x", x)
+    g.output("y", y)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Half 1: the unmutated world verifies clean
+# ---------------------------------------------------------------------------
+
+def test_existing_lowerings_clean_and_reported(small_geom):
+    """The pass is on by default and stamps `Lowered.verify_report`
+    across op/graph/partition/harden lowerings."""
+    cases = [
+        dict(src="xnor2"),
+        dict(src=bnn_dot_graph(4)),
+        dict(src=bnn_dot_graph(4), partition=small_geom.banks),
+        dict(src=bnn_dot_graph(4), harden="tmr"),
+        dict(src=bnn_dot_graph(4), harden="ecc"),
+        dict(src=bnn_dot_graph(4), harden="tmr+ecc"),
+        dict(src=bnn_dot_graph(4), partition=small_geom.banks,
+             harden="tmr+ecc"),
+    ]
+    for kw in cases:
+        src = kw.pop("src")
+        low = drim.compile(src, geom=small_geom).lower(**kw)
+        rep = low.verify_report
+        assert rep is not None and rep.ok, (kw, rep and rep.codes)
+        assert rep.aaps_checked > 0
+        again = verify_lowered(low)
+        assert again.ok
+
+
+def test_all_engines_certify_clean(small_geom):
+    for eng in ("resident", "baseline", "queued", "pallas"):
+        low = drim.compile(bnn_dot_graph(3), geom=small_geom).lower(eng)
+        assert low.verify_report is not None and low.verify_report.ok
+
+
+def test_random_corpus_clean(fast_mode):
+    """Random DAGs x {fused, raw partitions, every harden scheme}."""
+    n_seeds = 4 if fast_mode else 10
+    for seed in range(n_seeds):
+        g = random_graph(np.random.default_rng(seed))
+        fp = compile_graph(g)
+        assert verify_fused(g, fp) == []
+        for n_parts in (2, 3):
+            gp = partition_graph(g, n_parts)
+            assert verify_partition(g, gp) == []
+        for scheme in ("tmr", "ecc", "tmr+ecc"):
+            hg, prot = harden_graph(g, scheme)
+            assert verify_harden(hg, prot, scheme) == []
+            assert verify_fused(hg, compile_graph(hg)) == []
+
+
+def test_random_corpus_lowered_clean(fast_mode):
+    n_seeds = 2 if fast_mode else 4
+    for seed in range(n_seeds):
+        for geom in GEOMS:
+            g = random_graph(np.random.default_rng(100 + seed))
+            low = drim.compile(g, geom=geom).lower(
+                partition=geom.banks, harden="tmr+ecc")
+            assert low.verify_report is not None and low.verify_report.ok
+
+
+# ---------------------------------------------------------------------------
+# Enable/disable resolution: lower(verify=...) x DRIM_VERIFY
+# ---------------------------------------------------------------------------
+
+def test_verify_flag_resolution(small_geom, monkeypatch):
+    c = drim.compile("xnor2", geom=small_geom)
+    monkeypatch.delenv("DRIM_VERIFY", raising=False)
+    assert c.lower().verify_report is not None          # on by default
+    assert c.lower(verify=False).verify_report is None  # explicit off
+    monkeypatch.setenv("DRIM_VERIFY", "0")
+    assert c.lower().verify_report is None              # env default off
+    assert c.lower(verify=True).verify_report is not None
+    monkeypatch.setenv("DRIM_VERIFY", "1")
+    assert c.lower(verify=False).verify_report is not None  # CI force-on
+
+
+def test_verify_counts_telemetry(small_geom):
+    stats = drim.obs.REGISTRY.counters("drim.verify")
+    before = stats["programs"]
+    drim.compile("xnor2", geom=small_geom).lower(verify=True)
+    assert stats["programs"] > before
+    assert stats["clean"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Half 2: mutation differentials — each hazard class must be caught
+# ---------------------------------------------------------------------------
+# Layer 1: AAP-stream mutants ------------------------------------------------
+
+def mutant_v001_use_after_recycle():
+    """Redirect node y's read at a row holding node x's (unrelated)
+    result — the row-recycling aliasing hazard."""
+    g = two_independent_xnors()
+    fp = compile_graph(g)
+    x_row = dict(fp.device_outputs)["x"]
+    (_, lo, _) = fp.node_spans[-1]             # node y's span
+    prog = list(fp.program)
+    ins = prog[lo]
+    pos = V._READ_ARG[ins.op][0]
+    args = list(ins.args)
+    args[pos] = x_row
+    prog[lo] = dataclasses.replace(ins, args=tuple(args))
+    fp2 = dataclasses.replace(fp, program=tuple(prog))
+    return g, fp2, V.V001_USE_AFTER_RECYCLE
+
+
+def mutant_v002_read_after_destructive_read():
+    """Make the AAP after a DRA/TRA re-read one of its charge-shared
+    source rows."""
+    g = chained_xnors()
+    fp = compile_graph(g)
+    prog = list(fp.program)
+    for k, ins in enumerate(prog[:-1]):
+        if ins.op not in (OP_DRA, OP_TRA):
+            continue
+        dest = ins.args[V._DEST_ARG[ins.op][0]]
+        consumed = [ins.args[p] for p in V._READ_ARG[ins.op]
+                    if ins.args[p] != dest
+                    and ins.args[p] < fp.template_rows]
+        if not consumed:
+            continue
+        nxt = prog[k + 1]
+        pos = V._READ_ARG[nxt.op][0]
+        args = list(nxt.args)
+        args[pos] = consumed[0]
+        prog[k + 1] = dataclasses.replace(nxt, args=tuple(args))
+        fp2 = dataclasses.replace(fp, program=tuple(prog))
+        return g, fp2, V.V002_READ_AFTER_DESTRUCTIVE_READ
+    raise AssertionError("substrate has no DRA with a consumed source")
+
+
+def mutant_v003_out_of_bounds():
+    g = chained_xnors()
+    fp = compile_graph(g)
+    from repro.core.subarray import N_DCC_WL
+    ins = fp.program[0]
+    args = (fp.template_rows + N_DCC_WL + 10,) + ins.args[1:]
+    prog = (dataclasses.replace(ins, args=args),) + fp.program[1:]
+    return g, dataclasses.replace(fp, program=prog), V.V003_WL_OUT_OF_BOUNDS
+
+
+def mutant_v005_unwritten_read():
+    """Point the first AAP's read at the top x-row, which nothing has
+    staged or written at stream position 0."""
+    g = chained_xnors()
+    fp = compile_graph(g)
+    ins = fp.program[0]
+    pos = V._READ_ARG[ins.op][0]
+    args = list(ins.args)
+    args[pos] = fp.template_rows - 1
+    prog = (dataclasses.replace(ins, args=tuple(args)),) + fp.program[1:]
+    return g, dataclasses.replace(fp, program=prog), V.V005_UNWRITTEN_READ
+
+
+def mutant_v006_bogus_alias():
+    g = two_independent_xnors()
+    fp = compile_graph(g)
+    fp2 = dataclasses.replace(fp, alias_outputs=(("x", "a"),))
+    return g, fp2, V.V006_ALIAS_OUTPUT_VIOLATION
+
+
+def mutant_v007_swapped_outputs():
+    g = two_independent_xnors()
+    fp = compile_graph(g)
+    rows = dict(fp.device_outputs)
+    assert rows["x"] != rows["y"]
+    outs = (("x", rows["y"]), ("y", rows["x"]))
+    fp2 = dataclasses.replace(
+        fp, device_outputs=outs,
+        readback_rows=tuple(dict.fromkeys(r for _, r in outs)))
+    return g, fp2, V.V007_OUTPUT_MISMATCH
+
+
+def mutant_v008_dropped_span():
+    g = two_independent_xnors()
+    fp = compile_graph(g)
+    fp2 = dataclasses.replace(fp, node_spans=fp.node_spans[:-1])
+    return g, fp2, V.V008_NODE_SPAN_MALFORMED
+
+
+def mutant_v009_wrong_operand_wiring():
+    """Re-wire node x's DRA to read the same staged copy twice: every
+    read is still a legal operand row, but the stream computes
+    xnor(a, a) where the graph says xnor(a, b)."""
+    g = shared_operand_xnors()
+    fp = compile_graph(g)
+    (_, lo, hi) = fp.node_spans[0]
+    prog = list(fp.program)
+    for k in range(lo, hi):
+        if prog[k].op == OP_DRA:
+            a0, _, dest = prog[k].args
+            prog[k] = dataclasses.replace(prog[k], args=(a0, a0, dest))
+            fp2 = dataclasses.replace(fp, program=tuple(prog))
+            return g, fp2, V.V009_NODE_RESULT_MISMATCH
+    raise AssertionError("node 0 emitted no DRA")
+
+
+FUSED_MUTANTS = [
+    mutant_v001_use_after_recycle,
+    mutant_v002_read_after_destructive_read,
+    mutant_v003_out_of_bounds,
+    mutant_v005_unwritten_read,
+    mutant_v006_bogus_alias,
+    mutant_v007_swapped_outputs,
+    mutant_v008_dropped_span,
+    mutant_v009_wrong_operand_wiring,
+]
+
+
+@pytest.mark.parametrize("make", FUSED_MUTANTS,
+                         ids=lambda m: m.__name__.replace("mutant_", ""))
+def test_fused_mutant_dies(make):
+    g, fp, expected = make()
+    assert verify_fused(g, compile_graph(g)) == []   # substrate is clean
+    errors = verify_fused(g, fp)
+    assert expected in codes_of(errors), [str(e) for e in errors]
+
+
+def test_v004_row_budget():
+    g = bnn_dot_graph(4)
+    fp = compile_graph(g)
+    assert fp.n_data_rows > 1
+    errors = verify_fused(g, fp, row_budget=fp.n_data_rows - 1)
+    assert codes_of(errors) == {V.V004_ROW_BUDGET_EXCEEDED}
+
+
+# Layer 2: MIMD partition mutants -------------------------------------------
+
+def clean_partition(n_parts=2):
+    g = bnn_dot_graph(4)
+    gp = partition_graph(g, n_parts)
+    assert verify_partition(g, gp) == []
+    assert gp.cross_fence_rows > 0        # a real merge exists to race
+    return g, gp
+
+
+def test_v010_unfenced_cross_queue_read():
+    """Move a merge node's whole segment one fence stage earlier: the
+    partition stays structurally consistent, but the cross-queue read
+    now runs concurrently with its producer."""
+    g, gp = clean_partition()
+    origin, producer = _origins(g)
+    victim = None
+    for i, (opname, opnds, _) in enumerate(g.nodes):
+        if opname == "copy":
+            continue
+        for v in opnds:
+            j = producer.get(origin[v])
+            if (j is not None and gp.part_of[j] != gp.part_of[i]
+                    and gp.stage_of[i] == gp.stage_of[j] + 1):
+                victim = i
+                break
+        if victim is not None:
+            break
+    assert victim is not None
+    key = (gp.part_of[victim], gp.stage_of[victim])
+    stage_of = list(gp.stage_of)
+    segments = []
+    for seg in gp.segments:
+        if (seg.part, seg.stage) == key:
+            for nid in seg.node_ids:
+                stage_of[nid] = seg.stage - 1
+            seg = dataclasses.replace(seg, stage=seg.stage - 1)
+        segments.append(seg)
+    gp2 = dataclasses.replace(gp, stage_of=tuple(stage_of),
+                              segments=tuple(segments))
+    errors = verify_partition(g, gp2)
+    assert V.V010_UNFENCED_CROSS_QUEUE_READ in codes_of(errors), \
+        [str(e) for e in errors]
+
+
+def test_v011_partition_structure():
+    g, gp = clean_partition()
+    gp2 = dataclasses.replace(
+        gp, output_sources=gp.output_sources + (("ghost", "v999"),))
+    errors = verify_partition(g, gp2)
+    assert codes_of(errors) == {V.V011_PARTITION_STRUCTURE}
+
+
+def test_v012_cross_fence_accounting():
+    g, gp = clean_partition()
+    gp2 = dataclasses.replace(gp, cross_fence_rows=gp.cross_fence_rows + 1)
+    errors = verify_partition(g, gp2)
+    assert codes_of(errors) == {V.V012_CROSS_FENCE_ACCOUNTING}
+
+
+def test_v013_segment_row_budget():
+    g, gp = clean_partition()
+    gp2 = dataclasses.replace(gp, rows_used=gp.rows_used + 1)
+    errors = verify_partition(g, gp2)
+    assert codes_of(errors) == {V.V013_SEGMENT_ROW_BUDGET}
+
+
+# Layer 3: harden-invariant mutants -----------------------------------------
+
+def first_voter(hg, protected):
+    for i in sorted(protected):
+        if hg.nodes[i][0] == "maj3":
+            return i
+    raise AssertionError("no protected voter")
+
+
+def test_v030_shared_replica():
+    hg, prot = harden_graph(bnn_dot_graph(3), "tmr")
+    assert verify_harden(hg, prot, "tmr") == []
+    i = first_voter(hg, prot)
+    op, opnds, res = hg.nodes[i]
+    hg.nodes[i] = (op, (opnds[0], opnds[0], opnds[2]), res)
+    errors = verify_harden(hg, prot, "tmr")
+    assert V.V030_TMR_REPLICA_NOT_INDEPENDENT in codes_of(errors)
+
+
+def test_v031_divergent_replica():
+    hg, prot = harden_graph(bnn_dot_graph(3), "tmr")
+    i = first_voter(hg, prot)
+    op, opnds, res = hg.nodes[i]
+    hg.nodes[i] = (op, (hg.input_vids[0],) + opnds[1:], res)
+    errors = verify_harden(hg, prot, "tmr")
+    assert V.V031_TMR_REPLICA_DIVERGENT in codes_of(errors)
+
+
+def test_v032_missing_parity_output():
+    hg, prot = harden_graph(bnn_dot_graph(3), "ecc")
+    assert verify_harden(hg, prot, "ecc") == []
+    del hg.outputs[ECC_OUTPUT]
+    errors = verify_harden(hg, prot, "ecc")
+    assert codes_of(errors) == {V.V032_ECC_PARITY_INCOMPLETE}
+
+
+def test_v032_incomplete_fold():
+    hg, prot = harden_graph(bnn_dot_graph(3), "ecc")
+    primary = [n for n in hg.outputs if n != ECC_OUTPUT]
+    assert len(primary) > 1
+    hg.outputs[ECC_OUTPUT] = hg.outputs[primary[0]]
+    errors = verify_harden(hg, prot, "ecc")
+    assert V.V032_ECC_PARITY_INCOMPLETE in codes_of(errors)
+
+
+def test_v033_unprotected_fold():
+    hg, prot = harden_graph(bnn_dot_graph(3), "ecc")
+    primary = [n for n in hg.outputs if n != ECC_OUTPUT]
+    assert len(primary) > 1
+    origin, producer = _origins(hg)
+    j = producer[origin[hg.outputs[ECC_OUTPUT]]]
+    errors = verify_harden(hg, prot - {j}, "ecc")
+    assert codes_of(errors) == {V.V033_ECC_FOLD_UNPROTECTED}
+
+
+# V020: faults + mesh is a named lower-time diagnostic -----------------------
+
+def test_v020_faults_on_mesh_is_verify_error(small_geom):
+    mesh = drim.fleet_mesh(small_geom)
+    hot = FaultModel(p_dra=0.25, seed=3)
+    with pytest.raises(VerifyError, match="V020") as ei:
+        drim.compile("xnor2", geom=small_geom).lower(
+            "resident", mesh=mesh, faults=hot)
+    assert ei.value.code == V.V020_FAULTS_UNSUPPORTED_ON_MESH
+    assert "unsharded" in str(ei.value)       # back-compat matcher
+    assert isinstance(ei.value, ValueError)
+
+
+def test_v020_at_run_time(small_geom):
+    mesh = drim.fleet_mesh(small_geom)
+    low = drim.compile("xnor2", geom=small_geom).lower("resident",
+                                                       mesh=mesh)
+    rng = np.random.default_rng(0)
+    n_words = small_geom.n_subarrays * (small_geom.row_bits // 32)
+    a, b = (rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+            for _ in range(2))
+    with pytest.raises(VerifyError, match="V020"):
+        low.run(a, b, faults=FaultModel(p_dra=0.25, seed=3))
+
+
+# ---------------------------------------------------------------------------
+# Differential coverage floor: the suite must kill >= 6 distinct codes
+# ---------------------------------------------------------------------------
+
+def test_mutation_coverage_floor():
+    killed = {
+        V.V001_USE_AFTER_RECYCLE, V.V002_READ_AFTER_DESTRUCTIVE_READ,
+        V.V003_WL_OUT_OF_BOUNDS, V.V004_ROW_BUDGET_EXCEEDED,
+        V.V005_UNWRITTEN_READ, V.V006_ALIAS_OUTPUT_VIOLATION,
+        V.V007_OUTPUT_MISMATCH, V.V008_NODE_SPAN_MALFORMED,
+        V.V009_NODE_RESULT_MISMATCH, V.V010_UNFENCED_CROSS_QUEUE_READ,
+        V.V011_PARTITION_STRUCTURE, V.V012_CROSS_FENCE_ACCOUNTING,
+        V.V013_SEGMENT_ROW_BUDGET, V.V020_FAULTS_UNSUPPORTED_ON_MESH,
+        V.V030_TMR_REPLICA_NOT_INDEPENDENT, V.V031_TMR_REPLICA_DIVERGENT,
+        V.V032_ECC_PARITY_INCOMPLETE, V.V033_ECC_FOLD_UNPROTECTED,
+    }
+    assert killed <= set(V.ALL_CODES)
+    assert len(killed) >= 6
+
+
+def test_cli_certifies_clean(capsys):
+    assert V.main(["--k", "3", "--seeds", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "all lowerings verified clean" in out
